@@ -1,0 +1,65 @@
+"""Paper Fig. 2a: power-modes study on a single device.
+
+Compares fixed 15/30/60 W and the dynamic mode over 100 slots: completed
+jobs + average battery. Paper reference values: 15 W = (31 jobs, 89 %),
+30 W = (45, 42 %), 60 W = (58, 16 %), dynamic = (47, ~60 %).
+
+Note (EXPERIMENTS.md): the paper's 60 W jobs/battery pair violates energy
+conservation under its own (kappa, CE) table — 58x23 kJ exceeds battery +
+maximum harvest; the reproduction preserves the throughput ordering and
+the downtime/risk structure instead.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.simulator import SimConfig, simulate_single_device
+
+from .common import FIG2A_ARRIVALS, FIG2A_P, csv_row, timed
+
+STRATEGIES = {
+    "15W": ((), (1,)),
+    "30W": ((), (2,)),
+    "60W": ((), (3,)),
+    "dynamic": ((40.0, 60.0), (1, 2, 3)),
+}
+
+PAPER = {"15W": (31, 89), "30W": (45, 42), "60W": (58, 16), "dynamic": (47, 60)}
+
+
+def run(n_runs: int = 300) -> list[str]:
+    rows = []
+    for name, (thr, allowed) in STRATEGIES.items():
+        cfg = SimConfig(
+            n_groups=1,
+            n_per_group=1,
+            n_steps=100,
+            p_arrival=FIG2A_P,
+            pm_thresholds=thr,
+            pm_allowed=allowed,
+        )
+        res, dt = timed(
+            simulate_single_device, cfg, *FIG2A_ARRIVALS, n_runs=n_runs, repeat=1
+        )
+        jobs = res.completed.mean()
+        batt = res.mean_battery.mean()
+        pj, pb = PAPER[name]
+        rows.append(
+            csv_row(
+                f"fig2a/{name}",
+                dt * 1e6 / n_runs,
+                f"jobs={jobs:.1f} (paper {pj}); battery={batt:.0f}% (paper {pb}%); "
+                f"downtime={res.downtime_fraction.mean():.3f}",
+            )
+        )
+    return rows
+
+
+def main() -> None:
+    for row in run():
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

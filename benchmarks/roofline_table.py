@@ -1,0 +1,56 @@
+"""Deliverable (g): render the roofline table from the dry-run artifacts.
+
+Reads artifacts/dryrun/*.json (produced by ``repro.launch.dryrun``) and
+prints, per (arch × shape × mesh): the three roofline terms, the dominant
+bottleneck, and the MODEL/HLO FLOP ratio.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ARTIFACT_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "artifacts", "dryrun"
+)
+
+
+def load_cells(mesh: str | None = None) -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACT_DIR, "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        if mesh and d.get("mesh") != mesh:
+            continue
+        cells.append(d)
+    return cells
+
+
+def run() -> list[str]:
+    rows = []
+    for d in load_cells():
+        tag = f"/{d['tag']}" if d.get("tag") else ""
+        name = f"roofline/{d['arch']}/{d['shape']}/{d['mesh']}{tag}"
+        if "error" in d:
+            rows.append(f"{name},nan,ERROR: {d['error'][:80]}")
+            continue
+        r = d["roofline"]
+        rows.append(
+            f"{name},{r['step_time_s']*1e6:.0f},"
+            f"compute={r['compute_s']:.4f}s memory={r['memory_s']:.4f}s "
+            f"collective={r['collective_s']:.4f}s dominant={r['dominant']} "
+            f"useful_flop_ratio={d['useful_flop_ratio']:.2f}"
+        )
+    if not rows:
+        rows.append("roofline/none,0,run `python -m repro.launch.dryrun --all` first")
+    return rows
+
+
+def main() -> None:
+    for row in run():
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+
+  fig2a  — power-modes study (paper Fig. 2a)
+  fig2b  — q_lim via Brent under xi_lim (paper Fig. 2b)
+  fig3   — downtime fraction vs energy/job arrivals (paper Fig. 3)
+  fig4   — throughput / dropped jobs (paper Fig. 4)
+  serve  — engine integration: scheduler driving real decode + failover
+  roofline — per-cell dry-run roofline terms (deliverable g)
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import fig2a, fig2b, fig3, fig4, roofline_table, serve_bench
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in (fig2a, fig2b, fig3, fig4, serve_bench, roofline_table):
+        try:
+            for row in mod.run():
+                print(row, flush=True)
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"{mod.__name__},nan,FAILED: {e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(f"{failures} benchmark modules failed")
+
+
+if __name__ == "__main__":
+    main()

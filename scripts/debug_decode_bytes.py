@@ -1,0 +1,109 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import dataclasses
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.configs import SHAPES, get_config
+from repro.distributed.sharding import (
+    DECODE_RULES,
+    divisible_spec,
+    param_shardings,
+    use_mesh_rules,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.models import abstract_params, build_model
+from repro.models.inputs import input_specs
+from repro.models.transformer import cache_logical_axes
+from repro.roofline import analysis as A
+
+cfg = dataclasses.replace(get_config("qwen2.5-14b"), remat=False)
+cell = SHAPES["decode_32k"]
+mesh = make_production_mesh()
+model = build_model(cfg)
+abstract = abstract_params(model.template, cfg.param_dtype)
+p_sh = param_shardings(model.template, mesh, DECODE_RULES)
+cache_abs = model.cache_shapes(cell.global_batch, cell.seq_len + 128)
+cache_axes = cache_logical_axes(cfg)
+cache_sh = jax.tree_util.tree_map(
+    lambda s, a: NamedSharding(mesh, divisible_spec(s.shape, a, mesh, DECODE_RULES)),
+    cache_abs,
+    cache_axes,
+    is_leaf=lambda v: isinstance(v, jax.ShapeDtypeStruct),
+)
+tok = jax.ShapeDtypeStruct((cell.global_batch, 1), jnp.int32)
+tok_sh = NamedSharding(mesh, divisible_spec(tok.shape, ("batch", "seq"), mesh, DECODE_RULES))
+with use_mesh_rules(mesh, DECODE_RULES):
+    hlo = (
+        jax.jit(
+            lambda p, t, c: model.decode_step(p, t, c),
+            in_shardings=(p_sh, tok_sh, cache_sh),
+            donate_argnums=(2,),
+        )
+        .lower(abstract, tok, cache_abs)
+        .compile()
+        .as_text()
+    )
+open("/tmp/qwen_decode.hlo", "w").write(hlo)
+
+comps = A._parse_computations(hlo)
+entry = comps["__entry__"].name
+names = [n for n in comps if n != "__entry__"]
+comp_edges = {n: [] for n in names}
+in_deg = {n: 0 for n in names}
+for name in names:
+    for op in comps[name].ops:
+        callees = A._callees(op)
+        trip = None
+        if op.kind == "while":
+            cond = next((c for c, k in callees.items() if k == "condition"), None)
+            trip = A._trip_count(comps, op, cond)
+        for callee, kind in callees.items():
+            if callee not in in_deg:
+                continue
+            factor = (
+                float((trip or 1) + 1)
+                if kind == "condition"
+                else float(trip or 1)
+                if kind == "body"
+                else 1.0
+            )
+            comp_edges[name].append((callee, factor, kind in ("condition", "fusion")))
+            in_deg[callee] += 1
+mult = {n: 0.0 for n in names}
+fused = {n: None for n in names}
+mult[entry] = 1.0
+fused[entry] = False
+q = deque([n for n in names if in_deg[n] == 0])
+while q:
+    n = q.popleft()
+    for callee, factor, fe in comp_edges[n]:
+        mult[callee] += mult[n] * factor
+        cf = bool(fused[n]) or fe
+        fused[callee] = cf if fused[callee] is None else (fused[callee] and cf)
+        in_deg[callee] -= 1
+        if in_deg[callee] == 0:
+            q.append(callee)
+contrib = []
+for n in names:
+    if fused.get(n):
+        continue
+    m = mult.get(n, 0)
+    if m == 0:
+        continue
+    for op in comps[n].ops:
+        if op.kind in A._BYTE_FREE:
+            continue
+        b = A._op_bytes(comps[n], op) * m
+        if b > 2e9:
+            contrib.append((b, n, op.kind, op.line[:100]))
+contrib.sort(key=lambda t: -t[0])
+total = A.analyze_hlo(hlo)
+print(f"total bytes/device {total.bytes/1e9:.1f} GB")
+for b, n, k, l in contrib[:10]:
+    print(f"{b/1e9:8.1f} GB  {k:14s} in {n[:28]:28s} {l[:86]}")

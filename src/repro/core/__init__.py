@@ -1,0 +1,63 @@
+"""The paper's contribution: energy-aware scheduling for decentralized
+LLM inference (Khoshsirat, Perin, Rossi — 2024).
+
+Layers:
+  * :mod:`repro.core.energy` / :mod:`repro.core.power` — energy arrivals,
+    battery dynamics (Eq. 1), Jetson Orin power-mode table, dynamic PM.
+  * :mod:`repro.core.semi_markov` — the device semi-Markov chain and its
+    stationary metrics (Eqs. 2-4).
+  * :mod:`repro.core.rates` — q_lim via Brent's method (Eq. 5).
+  * :mod:`repro.core.policies` — uniform / long-term / adaptive (Alg. 1).
+  * :mod:`repro.core.simulator` — vectorized JAX network simulation.
+"""
+
+from .energy import DiscreteMDF, battery_update, convolve_mdf, uniform_mdf
+from .network import DeviceSpec, NetworkTopology, paper_topology
+from .policies import POLICIES, adaptive_probs, long_term_probs, uniform_probs
+from .power import (
+    ORIN_POWER_MODES,
+    POWER_SAVE,
+    PowerMode,
+    PowerModePolicy,
+    dynamic_policy,
+    fixed_policy,
+)
+from .rates import RateLimits, q_lim, q_lim_energy, risk_curve
+from .rootfind import brentq, find_rate_for_risk
+from .semi_markov import DeviceModel, SemiMarkovChain, state_index, state_tuple
+from .simulator import SimConfig, SimResult, build_runner, simulate, simulate_single_device
+
+__all__ = [
+    "DiscreteMDF",
+    "battery_update",
+    "convolve_mdf",
+    "uniform_mdf",
+    "DeviceSpec",
+    "NetworkTopology",
+    "paper_topology",
+    "POLICIES",
+    "adaptive_probs",
+    "long_term_probs",
+    "uniform_probs",
+    "ORIN_POWER_MODES",
+    "POWER_SAVE",
+    "PowerMode",
+    "PowerModePolicy",
+    "dynamic_policy",
+    "fixed_policy",
+    "RateLimits",
+    "q_lim",
+    "q_lim_energy",
+    "risk_curve",
+    "brentq",
+    "find_rate_for_risk",
+    "DeviceModel",
+    "SemiMarkovChain",
+    "state_index",
+    "state_tuple",
+    "SimConfig",
+    "SimResult",
+    "build_runner",
+    "simulate",
+    "simulate_single_device",
+]

@@ -1,0 +1,68 @@
+"""Scheduling policies for replica selection (paper Sec. IV, Algorithm 1).
+
+All three policies return a probability distribution over the devices of
+one group/layer, restricted to the currently *available* devices (active
+and queue-empty). They are written in ``jax.numpy`` so the same code runs
+concretely (router) and traced (inside the jitted network simulator).
+
+* ``uniform``   — 1/|available| over available devices.
+* ``long_term`` — Eq. (6): ``r_i = q_lim,i / sum_j q_lim,j`` over available.
+* ``adaptive``  — Alg. 1 lines 20-28: start from long-term, scale every
+  device currently in the critical power mode PM1 by ``z = alpha/N_l``
+  (``alpha`` defaults to the number of PM1 devices), re-normalize.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["uniform_probs", "long_term_probs", "adaptive_probs", "POLICIES"]
+
+_EPS = 1e-12
+
+
+def _masked_normalize(x, mask):
+    x = jnp.where(mask, x, 0.0)
+    total = jnp.sum(x)
+    n_avail = jnp.sum(mask.astype(x.dtype))
+    # Fall back to uniform-over-available if all mass was zeroed out.
+    fallback = jnp.where(mask, 1.0, 0.0) / jnp.maximum(n_avail, 1.0)
+    return jnp.where(total > _EPS, x / jnp.maximum(total, _EPS), fallback)
+
+
+def uniform_probs(q_lims, pm, available):
+    """Uniform over available devices (q_lims/pm unused, kept for API parity)."""
+    del q_lims, pm
+    mask = available.astype(jnp.float32)
+    return mask / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def long_term_probs(q_lims, pm, available):
+    """Eq. (6) restricted to available devices."""
+    del pm
+    return _masked_normalize(jnp.asarray(q_lims, dtype=jnp.float32), available)
+
+
+def adaptive_probs(q_lims, pm, available, alpha=None):
+    """Algorithm 1 ``ADAPTIVE``: down-weight critical-mode (PM1) devices.
+
+    ``pm`` is each device's *current* active power mode index (1-based);
+    devices in PM1 (the lowest-energy mode) get their long-term rate scaled
+    by ``z = alpha / N_l`` and the vector is re-normalized.
+    """
+    x = long_term_probs(q_lims, None, available)
+    pm = jnp.asarray(pm)
+    critical = (pm == 1) & available
+    n_l = x.shape[-1]
+    if alpha is None:
+        alpha = jnp.sum(critical.astype(jnp.float32))
+    z = alpha / n_l
+    x = jnp.where(critical, x * z, x)
+    return _masked_normalize(x, available)
+
+
+POLICIES = {
+    "uniform": uniform_probs,
+    "long_term": long_term_probs,
+    "adaptive": adaptive_probs,
+}

@@ -1,0 +1,305 @@
+"""Semi-Markov model of an energy-harvesting edge device (paper Sec. III).
+
+State ``S = (Q, E, gamma)``:
+
+* ``Q in {0, 1}`` — queue occupancy (one-job queue, paper Sec. II);
+* ``E in {0..E_max}`` — discrete battery level in energy units;
+* ``gamma in {0, 1}`` — 0: power-saving, 1: active.
+
+Dynamics per processing stage ``m`` (dwell ``kappa_m`` slots):
+
+* active & processing (``gamma=1, Q=1``): dwell ``kappa(PM)`` slots, consume
+  ``CE(PM)``, battery update Eq. (1); a new job arrives within the stage
+  w.p. ``p_m = 1 - (1-q)^kappa_m``;
+* active & idle (``gamma=1, Q=0``): dwell 1 slot, no consumption;
+* power saving (``gamma=0``): dwell 1 slot, arrivals rejected, pending job
+  (if any) held, recover until ``E > E'_th`` (hysteresis; entry at
+  ``E < E_th``).
+
+The active power mode ``PM >= 1`` is a deterministic function of ``E``
+(:class:`repro.core.power.PowerModePolicy`) — fixed modes and the paper's
+dynamic mode are both instances.
+
+From the embedded chain's stationary distribution the paper's metrics are
+derived: Eq. (2) mean energy, Eq. (3) downtime risk ``xi``, Eq. (4)
+expected processing slots ``kappa_bar``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+from .energy import DiscreteMDF
+from .power import PowerModePolicy
+
+__all__ = ["DeviceModel", "SemiMarkovChain", "state_index", "state_tuple"]
+
+
+def state_index(q: int, e: int, gamma: int, e_max: int) -> int:
+    """Flat index of state ``(Q, E, gamma)``."""
+    return (gamma * 2 + q) * (e_max + 1) + e
+
+
+def state_tuple(idx: int, e_max: int) -> tuple[int, int, int]:
+    """Inverse of :func:`state_index` -> ``(Q, E, gamma)``."""
+    e = idx % (e_max + 1)
+    rest = idx // (e_max + 1)
+    q = rest % 2
+    gamma = rest // 2
+    return q, e, gamma
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceModel:
+    """Static description of one edge device for the semi-Markov analysis."""
+
+    mdf: DiscreteMDF  # per-slot energy arrival distribution f(e)
+    policy: PowerModePolicy  # battery level -> active PM
+    e_max: int = 100  # battery capacity in units
+    e_th: int = 10  # power-save entry threshold (E < e_th)
+    e_th_hi: int = 25  # power-save exit threshold (E > e_th_hi)
+
+    def __post_init__(self) -> None:
+        if not (0 <= self.e_th < self.e_th_hi <= self.e_max):
+            raise ValueError("need 0 <= e_th < e_th_hi <= e_max (hysteresis)")
+
+    def chain(self, q: float) -> "SemiMarkovChain":
+        """Build the chain for device-level job arrival probability ``q``."""
+        return SemiMarkovChain(self, q)
+
+
+class SemiMarkovChain:
+    """Embedded-chain transition structure + stationary metrics."""
+
+    def __init__(self, device: DeviceModel, q: float):
+        if not (0.0 <= q <= 1.0):
+            raise ValueError(f"arrival probability q must be in [0,1], got {q}")
+        self.device = device
+        self.q = float(q)
+        self.n_states = 4 * (device.e_max + 1)
+        self._P: np.ndarray | None = None
+        self._pi: np.ndarray | None = None
+
+    # ------------------------------------------------------------------
+    # Transition matrix
+    # ------------------------------------------------------------------
+    def transition_matrix(self) -> np.ndarray:
+        if self._P is not None:
+            return self._P
+        dev = self.device
+        e_max, e_th, e_th_hi = dev.e_max, dev.e_th, dev.e_th_hi
+        q = self.q
+        n = self.n_states
+        P = np.zeros((n, n), dtype=np.float64)
+
+        # Pre-compute per-kappa convolved income PMFs.
+        kappas = sorted({m.kappa for m in dev.policy.modes} | {1})
+        income = {k: dev.mdf.convolve(k) for k in kappas}
+
+        for e in range(e_max + 1):
+            pm_active = int(dev.policy.pm_for_energy(e))
+            mode = dev.policy.mode(pm_active)
+
+            # --- gamma = 1, Q = 0: idle active, dwell 1 slot, no consumption
+            src = state_index(0, e, 1, e_max)
+            g = income[1]
+            for inc, prob in enumerate(g):
+                if prob == 0.0:
+                    continue
+                e2 = min(e + inc, e_max)
+                # Case 1 (paper): stay idle w.p. (1-q), accept arrival w.p. q.
+                P[src, state_index(0, e2, 1, e_max)] += prob * (1.0 - q)
+                P[src, state_index(1, e2, 1, e_max)] += prob * q
+
+            # --- gamma = 1, Q = 1: processing, dwell kappa(PM), consume CE(PM)
+            src = state_index(1, e, 1, e_max)
+            kappa, ce = mode.kappa, mode.ce
+            if e < ce:
+                # Energy gate (paper Sec. III: "CE(PM) <= E_m"): the job
+                # waits one slot for the battery to cover its stage cost.
+                # Queue full => new arrivals rejected.
+                g = income[1]
+                for inc, prob in enumerate(g):
+                    if prob == 0.0:
+                        continue
+                    e2 = min(e + inc, e_max)
+                    P[src, state_index(1, e2, 1, e_max)] += prob
+            else:
+                p_m = 1.0 - (1.0 - q) ** kappa
+                g = income[kappa]
+                for inc, prob in enumerate(g):
+                    if prob == 0.0:
+                        continue
+                    e2 = int(np.clip(e + inc - ce, 0, e_max))  # Eq. (1)
+                    gamma2 = 0 if e2 < e_th else 1
+                    # Job completes; new arrival during the stage w.p. p_m.
+                    P[src, state_index(0, e2, gamma2, e_max)] += prob * (1.0 - p_m)
+                    P[src, state_index(1, e2, gamma2, e_max)] += prob * p_m
+
+            # --- gamma = 0: power saving (Q preserved), dwell 1 slot
+            g = income[1]
+            for qq in (0, 1):
+                src = state_index(qq, e, 0, e_max)
+                for inc, prob in enumerate(g):
+                    if prob == 0.0:
+                        continue
+                    e2 = min(e + inc, e_max)
+                    gamma2 = 1 if e2 > e_th_hi else 0  # hysteresis exit
+                    P[src, state_index(qq, e2, gamma2, e_max)] += prob
+
+        # Each row must be a distribution.
+        np.testing.assert_allclose(P.sum(axis=1), 1.0, atol=1e-9)
+        self._P = P
+        return P
+
+    # ------------------------------------------------------------------
+    # Stationary distribution of the embedded chain
+    # ------------------------------------------------------------------
+    def stationary(self) -> np.ndarray:
+        """pi of the recurrent class reachable from (Q=0, E=E_max, active).
+
+        The reachable set (BFS over the transition sparsity) is closed, so
+        pi solves the linear system ``pi (I - P_R) = 0, sum(pi) = 1`` on it.
+        Falls back to repeated squaring of P if the direct solve is
+        singular (multiple recurrent classes).
+        """
+        if self._pi is not None:
+            return self._pi
+        P = self.transition_matrix()
+        start = state_index(0, self.device.e_max, 1, self.device.e_max)
+
+        # BFS reachability — the reachable set is closed under P.
+        reach = np.zeros(self.n_states, dtype=bool)
+        frontier = [start]
+        reach[start] = True
+        while frontier:
+            s = frontier.pop()
+            for t in np.nonzero(P[s] > 0.0)[0]:
+                if not reach[t]:
+                    reach[t] = True
+                    frontier.append(int(t))
+        idx = np.nonzero(reach)[0]
+        Pr = P[np.ix_(idx, idx)]
+
+        pi_r = None
+        try:
+            A = np.eye(len(idx)) - Pr.T
+            A[-1, :] = 1.0
+            b = np.zeros(len(idx))
+            b[-1] = 1.0
+            cand = np.linalg.solve(A, b)
+            if np.all(cand > -1e-9):
+                pi_r = np.maximum(cand, 0.0)
+        except np.linalg.LinAlgError:
+            pi_r = None
+        if pi_r is None:
+            # Repeated squaring fallback (robust to reducibility).
+            M = Pr.copy()
+            local_start = int(np.searchsorted(idx, start))
+            prev = M[local_start]
+            for _ in range(64):
+                M = M @ M
+                M /= M.sum(axis=1, keepdims=True)
+                cur = M[local_start]
+                if np.max(np.abs(cur - prev)) < 1e-14:
+                    break
+                prev = cur
+            pi_r = np.maximum(M[local_start], 0.0)
+
+        pi = np.zeros(self.n_states)
+        pi[idx] = pi_r / pi_r.sum()
+        self._pi = pi
+        return pi
+
+    # ------------------------------------------------------------------
+    # Dwell times and metrics (Eqs. 2-4)
+    # ------------------------------------------------------------------
+    @functools.cached_property
+    def _processing_mask(self) -> np.ndarray:
+        """States actually processing: Q=1, gamma=1 and E covers CE(PM)."""
+        dev = self.device
+        m = np.zeros(self.n_states, dtype=bool)
+        for e in range(dev.e_max + 1):
+            pm = int(dev.policy.pm_for_energy(e))
+            if e >= dev.policy.mode(pm).ce:
+                m[state_index(1, e, 1, dev.e_max)] = True
+        return m
+
+    @functools.cached_property
+    def dwell_slots(self) -> np.ndarray:
+        """T_S in slots: kappa(PM) for processing states, 1 otherwise
+        (idle, power-save, and energy-gated waiting states)."""
+        dev = self.device
+        t = np.ones(self.n_states, dtype=np.float64)
+        for e in range(dev.e_max + 1):
+            pm = int(dev.policy.pm_for_energy(e))
+            if e >= dev.policy.mode(pm).ce:
+                t[state_index(1, e, 1, dev.e_max)] = dev.policy.mode(pm).kappa
+        return t
+
+    @functools.cached_property
+    def energy_levels(self) -> np.ndarray:
+        return np.array(
+            [state_tuple(i, self.device.e_max)[1] for i in range(self.n_states)],
+            dtype=np.float64,
+        )
+
+    def mean_energy(self) -> float:
+        """Time-averaged battery level (semi-Markov time average).
+
+        Note: the paper's Eq. (2) prints ``sum(pi*E) / sum(pi*T)`` which is
+        not a time average; we implement the standard
+        ``sum(pi*E*T) / sum(pi*T)`` (see DESIGN.md Sec. 6) and expose the
+        literal form as :meth:`mean_energy_embedded`.
+        """
+        pi, t, e = self.stationary(), self.dwell_slots, self.energy_levels
+        return float(np.dot(pi * t, e) / np.dot(pi, t))
+
+    def mean_energy_embedded(self) -> float:
+        """Paper Eq. (2) as printed."""
+        pi, t, e = self.stationary(), self.dwell_slots, self.energy_levels
+        return float(np.dot(pi, e) / np.dot(pi, t))
+
+    def risk(self, e_lim: int | None = None) -> float:
+        """Eq. (3): total time-fraction with ``E <= e_lim``.
+
+        Defaults to the power-save entry threshold minus one so the metric
+        is exactly "fraction of time at a level that has triggered (or
+        would trigger) power saving".
+        """
+        if e_lim is None:
+            e_lim = self.device.e_th - 1
+        pi, t, e = self.stationary(), self.dwell_slots, self.energy_levels
+        mask = e <= e_lim
+        return float(np.dot(pi[mask], t[mask]) / np.dot(pi, t))
+
+    def downtime_fraction(self) -> float:
+        """Time fraction spent in power-saving mode (gamma = 0)."""
+        pi, t = self.stationary(), self.dwell_slots
+        gam = np.array(
+            [state_tuple(i, self.device.e_max)[2] for i in range(self.n_states)]
+        )
+        mask = gam == 0
+        return float(np.dot(pi[mask], t[mask]) / np.dot(pi, t))
+
+    def kappa_bar(self) -> float:
+        """Eq. (4): expected processing slots over active processing states."""
+        pi, t = self.stationary(), self.dwell_slots
+        sel = self._processing_mask
+        num = np.dot(pi[sel], t[sel])
+        den = pi[sel].sum()
+        if den <= 0.0:
+            # No processing mass (q = 0): fall back to the best-energy mode.
+            dev = self.device
+            return float(dev.policy.kappa_for_energy(dev.e_max))
+        return float(num / den)
+
+    def throughput(self) -> float:
+        """Long-run completed jobs per slot."""
+        pi, t = self.stationary(), self.dwell_slots
+        sel = self._processing_mask
+        # One job completes per visit to a processing state.
+        return float(pi[sel].sum() / np.dot(pi, t))

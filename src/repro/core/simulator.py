@@ -1,0 +1,300 @@
+"""JAX simulator of the decentralized inference network (paper Secs. II-V).
+
+Semantics (faithful to the paper's model):
+
+* Time advances in slots of length delta. Job arrivals are Bernoulli(p)
+  per slot (Sec. III).
+* A job needs one device from each of the ``G`` groups (Petals-style
+  pipeline). On arrival, a device is *designated* in every group by the
+  scheduling policy (Sec. IV); the job occupies that device's one-slot
+  queue (``Q = 1``) until the device starts the job's stage. A device is
+  *available* for designation iff it is active and its queue is empty —
+  a device that is currently processing but has an empty queue can accept
+  a designation (transition case ``Q_m = Q_{m+1} = 1`` of Sec. III).
+* If any group has no available device, the job is **dropped**.
+* Stage ``g`` starts once stage ``g-1`` is complete and the designated
+  device is free; it runs for ``kappa(PM)`` slots at the power mode chosen
+  from the device's battery level at stage start, consuming ``CE(PM)``
+  (spread uniformly over the stage's slots — battery telemetry only; the
+  per-stage total matches Eq. (1)).
+* Hysteresis: battery below ``E_th`` puts the device in power-saving mode
+  (processing pauses, designations rejected) until it recovers above
+  ``E'_th``.
+
+The whole network steps inside one ``lax.scan``; Monte-Carlo repetitions
+(the paper uses 1000) are ``vmap``-ed over seeds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .network import NetworkTopology
+from .policies import POLICIES
+
+__all__ = ["SimConfig", "SimResult", "build_runner", "simulate", "simulate_single_device"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    """Static simulation parameters (hashable -> one jit per config)."""
+
+    n_groups: int
+    n_per_group: int
+    n_steps: int = 100
+    p_arrival: float = 0.6
+    e_max: float = 100.0
+    e_th: float = 10.0
+    e_th_hi: float = 25.0
+    e_init: float | None = None  # default: full battery
+    policy: str = "uniform"  # uniform | long_term | adaptive
+    # PM tables; index 0 = power save (unused entries 0).
+    kappa_table: tuple[int, ...] = (0, 3, 2, 1)
+    ce_table: tuple[float, ...] = (0.0, 26.0, 22.0, 23.0)
+    # Battery thresholds for the active-PM lookup (dynamic mode); a fixed
+    # mode is expressed as thresholds=() allowed=(pm,).
+    pm_thresholds: tuple[float, ...] = (40.0, 60.0)
+    pm_allowed: tuple[int, ...] = (1, 2, 3)
+
+    def __post_init__(self) -> None:
+        if self.policy not in POLICIES:
+            raise ValueError(f"unknown policy {self.policy!r}")
+        if len(self.pm_allowed) != len(self.pm_thresholds) + 1:
+            raise ValueError("need len(pm_allowed) == len(pm_thresholds) + 1")
+
+
+@dataclasses.dataclass
+class SimResult:
+    """Per-run metric arrays (leading axis = Monte-Carlo runs)."""
+
+    completed: np.ndarray
+    dropped: np.ndarray
+    arrivals: np.ndarray
+    downtime_fraction: np.ndarray  # mean fraction of devices in power save
+    mean_battery: np.ndarray  # time-averaged mean battery level (units)
+
+    @property
+    def normalized_throughput(self) -> np.ndarray:
+        """Fig. 4a metric: completed / total input jobs."""
+        return self.completed / np.maximum(self.arrivals, 1)
+
+    def summary(self) -> dict[str, Any]:
+        return {
+            "completed": float(self.completed.mean()),
+            "dropped": float(self.dropped.mean()),
+            "arrivals": float(self.arrivals.mean()),
+            "normalized_throughput": float(self.normalized_throughput.mean()),
+            "downtime_fraction": float(self.downtime_fraction.mean()),
+            "mean_battery": float(self.mean_battery.mean()),
+            "completed_std": float(self.completed.std()),
+            "downtime_std": float(self.downtime_fraction.std()),
+        }
+
+
+def build_runner(
+    config: SimConfig,
+    arrival_lo: np.ndarray,
+    arrival_hi: np.ndarray,
+    long_term_rates: np.ndarray | None = None,
+):
+    """Build a jitted ``run(key) -> metrics dict`` for one network."""
+    G, N = config.n_groups, config.n_per_group
+    n_jobs = 2 * N  # <= N queued + N processing per group (see module doc)
+
+    kappa = jnp.asarray(config.kappa_table, dtype=jnp.float32)
+    ce = jnp.asarray(config.ce_table, dtype=jnp.float32)
+    thr = jnp.asarray(config.pm_thresholds, dtype=jnp.float32)
+    allowed = jnp.asarray(config.pm_allowed, dtype=jnp.int32)
+    lo = jnp.asarray(arrival_lo, dtype=jnp.int32).reshape(G, N)
+    hi = jnp.asarray(arrival_hi, dtype=jnp.int32).reshape(G, N)
+    if long_term_rates is None:
+        long_term_rates = np.ones((G, N))
+    rates = jnp.asarray(long_term_rates, dtype=jnp.float32).reshape(G, N)
+    policy_fn = POLICIES[config.policy]
+    e_init = config.e_max if config.e_init is None else config.e_init
+
+    def pm_of(e):
+        """Active PM index from battery level (paper's lookup table)."""
+        idx = jnp.searchsorted(thr, e, side="right") if thr.size else jnp.zeros_like(
+            jnp.asarray(e, dtype=jnp.int32)
+        )
+        return allowed[idx]
+
+    def step(carry, key):
+        (E, gamma, queued, j_act, j_proc, j_stage, j_dev, j_rem, j_pm, ctr) = carry
+        completed, dropped, arrivals, ps_sum, batt_sum = ctr
+        k_inc, k_arr, k_pick = jax.random.split(key, 3)
+
+        # 1) harvest energy
+        inc = jax.random.randint(k_inc, (G, N), lo, hi + 1).astype(jnp.float32)
+
+        # 2) progress processing jobs (paused while the device power-saves)
+        stage_c = jnp.clip(j_stage, 0, G - 1)
+        d_cur = jnp.take_along_axis(j_dev, stage_c[:, None], axis=1)[:, 0]
+        dev_active = gamma[stage_c, d_cur]
+        running = j_act & j_proc & dev_active
+        cons_j = jnp.where(running, ce[j_pm] / kappa[j_pm], 0.0)
+        cons = jnp.zeros((G, N), jnp.float32).at[stage_c, d_cur].add(cons_j)
+        j_rem = j_rem - running.astype(j_rem.dtype)
+
+        # 3) completions
+        done = j_act & j_proc & (j_rem <= 0.0)
+        j_proc = j_proc & ~done
+        j_stage = j_stage + done.astype(jnp.int32)
+        finished = done & (j_stage >= G)
+        completed = completed + jnp.sum(finished).astype(jnp.int32)
+        j_act = j_act & ~finished
+
+        # 4) battery + hysteresis (Eq. (1) totals per stage; per-slot spread)
+        E = jnp.clip(E + inc - cons, 0.0, config.e_max)
+        gamma = jnp.where(E < config.e_th, False, jnp.where(E > config.e_th_hi, True, gamma))
+
+        # 5) stage starts for waiting jobs
+        busy = jnp.zeros((G, N), jnp.int32).at[
+            jnp.clip(j_stage, 0, G - 1),
+            jnp.take_along_axis(j_dev, jnp.clip(j_stage, 0, G - 1)[:, None], axis=1)[:, 0],
+        ].add((j_act & j_proc).astype(jnp.int32)) > 0
+        stage_w = jnp.clip(j_stage, 0, G - 1)
+        d_wait = jnp.take_along_axis(j_dev, stage_w[:, None], axis=1)[:, 0]
+        pm_try = pm_of(E[stage_w, d_wait])
+        # Energy gate (paper: CE(PM) <= E): a stage starts only once the
+        # battery covers its full cost.
+        gate_ok = E[stage_w, d_wait] >= ce[pm_try]
+        can_start = (
+            j_act & ~j_proc & gamma[stage_w, d_wait] & ~busy[stage_w, d_wait] & gate_ok
+        )
+        # Tie-break: at most one waiting job per device by construction
+        # (queue capacity 1); see tests/test_simulator.py invariants.
+        pm_new = pm_try
+        j_pm = jnp.where(can_start, pm_new, j_pm)
+        j_rem = jnp.where(can_start, kappa[pm_new], j_rem)
+        j_proc = j_proc | can_start
+        started = jnp.zeros((G, N), jnp.int32).at[stage_w, d_wait].add(
+            can_start.astype(jnp.int32)
+        ) > 0
+        queued = queued & ~started
+
+        # 6) new arrival + designation (Alg. 1)
+        arrive = jax.random.bernoulli(k_arr, config.p_arrival)
+        arrivals = arrivals + arrive.astype(jnp.int32)
+        avail = gamma & ~queued
+        all_ok = jnp.all(jnp.any(avail, axis=1))
+        slot = jnp.argmin(j_act)  # first free job slot
+        has_slot = ~j_act[slot]
+        accept = arrive & all_ok & has_slot
+        dropped = dropped + (arrive & ~(all_ok & has_slot)).astype(jnp.int32)
+
+        pm_now = pm_of(E)
+        probs = jax.vmap(policy_fn)(rates, pm_now, avail)  # [G, N]
+        logits = jnp.where(probs > 0, jnp.log(jnp.maximum(probs, 1e-12)), -1e9)
+        pick_keys = jax.random.split(k_pick, G)
+        choice = jax.vmap(jax.random.categorical)(pick_keys, logits)  # [G]
+
+        designate = jnp.zeros((G, N), bool).at[jnp.arange(G), choice].set(True)
+        queued = queued | (designate & accept)
+        j_act = j_act.at[slot].set(jnp.where(accept, True, j_act[slot]))
+        j_proc = j_proc.at[slot].set(jnp.where(accept, False, j_proc[slot]))
+        j_stage = j_stage.at[slot].set(jnp.where(accept, 0, j_stage[slot]))
+        j_dev = j_dev.at[slot].set(jnp.where(accept, choice, j_dev[slot]))
+        j_rem = j_rem.at[slot].set(jnp.where(accept, 0.0, j_rem[slot]))
+
+        # 7) telemetry
+        ps_sum = ps_sum + jnp.sum(~gamma).astype(jnp.int32)
+        batt_sum = batt_sum + jnp.mean(E)
+
+        ctr = (completed, dropped, arrivals, ps_sum, batt_sum)
+        return (E, gamma, queued, j_act, j_proc, j_stage, j_dev, j_rem, j_pm, ctr), None
+
+    def run(key):
+        carry = (
+            jnp.full((G, N), e_init, jnp.float32),  # E
+            jnp.ones((G, N), bool),  # gamma (active)
+            jnp.zeros((G, N), bool),  # queued
+            jnp.zeros((n_jobs,), bool),  # j_act
+            jnp.zeros((n_jobs,), bool),  # j_proc
+            jnp.zeros((n_jobs,), jnp.int32),  # j_stage
+            jnp.zeros((n_jobs, G), jnp.int32),  # j_dev
+            jnp.zeros((n_jobs,), jnp.float32),  # j_rem
+            jnp.ones((n_jobs,), jnp.int32),  # j_pm
+            (
+                jnp.int32(0),
+                jnp.int32(0),
+                jnp.int32(0),
+                jnp.int32(0),
+                jnp.float32(0.0),
+            ),
+        )
+        keys = jax.random.split(key, config.n_steps)
+        carry, _ = jax.lax.scan(step, carry, keys)
+        completed, dropped, arrivals, ps_sum, batt_sum = carry[-1]
+        return {
+            "completed": completed,
+            "dropped": dropped,
+            "arrivals": arrivals,
+            "downtime_fraction": ps_sum / (config.n_steps * G * N),
+            "mean_battery": batt_sum / config.n_steps,
+        }
+
+    return jax.jit(run)
+
+
+def simulate(
+    topology: NetworkTopology,
+    config: SimConfig,
+    *,
+    n_runs: int = 100,
+    seed: int = 0,
+    long_term_rates: np.ndarray | None = None,
+    xi_lim: float = 0.01,
+) -> SimResult:
+    """Run ``n_runs`` Monte-Carlo repetitions of the network simulation.
+
+    ``long_term_rates`` (Eq. 6 numerators) are computed from the semi-Markov
+    model when needed and not provided.
+    """
+    if config.n_groups != topology.n_groups or config.n_per_group != topology.n_per_group:
+        raise ValueError("config/topology shape mismatch")
+    lo, hi = topology.arrival_bounds()
+    if long_term_rates is None and config.policy in ("long_term", "adaptive"):
+        long_term_rates = topology.long_term_rates(xi_lim)
+    runner = build_runner(config, lo, hi, long_term_rates)
+    keys = jax.random.split(jax.random.PRNGKey(seed), n_runs)
+    out = jax.vmap(runner)(keys)
+    out = jax.tree_util.tree_map(np.asarray, out)
+    return SimResult(
+        completed=out["completed"],
+        dropped=out["dropped"],
+        arrivals=out["arrivals"],
+        downtime_fraction=out["downtime_fraction"],
+        mean_battery=out["mean_battery"],
+    )
+
+
+def simulate_single_device(
+    config: SimConfig,
+    arrival_lo: int,
+    arrival_hi: int,
+    *,
+    n_runs: int = 100,
+    seed: int = 0,
+) -> SimResult:
+    """Paper Fig. 2a: one device, one group (power-mode study)."""
+    cfg = dataclasses.replace(config, n_groups=1, n_per_group=1, policy="uniform")
+    runner = build_runner(
+        cfg, np.array([[arrival_lo]]), np.array([[arrival_hi]]), np.ones((1, 1))
+    )
+    keys = jax.random.split(jax.random.PRNGKey(seed), n_runs)
+    out = jax.vmap(runner)(keys)
+    out = jax.tree_util.tree_map(np.asarray, out)
+    return SimResult(
+        completed=out["completed"],
+        dropped=out["dropped"],
+        arrivals=out["arrivals"],
+        downtime_fraction=out["downtime_fraction"],
+        mean_battery=out["mean_battery"],
+    )

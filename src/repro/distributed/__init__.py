@@ -1,0 +1,35 @@
+"""Distribution substrate: mesh axes, logical sharding rules, pipeline
+parallelism, and collective helpers."""
+
+from .pipeline import gpipe, pipeline_apply
+from .sharding import (
+    AxisRules,
+    DECODE_RULES,
+    DEFAULT_RULES,
+    PREFILL_RULES,
+    SERVE_RULES,
+    TRAIN_RULES,
+    divisible_spec,
+    logical,
+    logical_sharding,
+    mesh_axes,
+    param_shardings,
+    use_mesh_rules,
+)
+
+__all__ = [
+    "gpipe",
+    "pipeline_apply",
+    "AxisRules",
+    "DECODE_RULES",
+    "DEFAULT_RULES",
+    "PREFILL_RULES",
+    "SERVE_RULES",
+    "TRAIN_RULES",
+    "divisible_spec",
+    "logical",
+    "logical_sharding",
+    "mesh_axes",
+    "param_shardings",
+    "use_mesh_rules",
+]

@@ -1,0 +1,212 @@
+"""Logical-axis sharding rules (MaxText-style) for pjit distribution.
+
+Model code annotates arrays with *logical* axis names ("batch", "heads",
+"ff", ...). A rule table maps logical names to physical mesh axes; rules
+referencing axes absent from the active mesh are dropped, so the same
+model code runs on the single-pod ``(data, model)`` mesh, the multi-pod
+``(pod, data, model)`` mesh, or a single CPU device (no mesh: no-op).
+
+Two standard rule sets:
+
+* ``DEFAULT_RULES`` (training): batch over (pod, data); TP over model for
+  heads / ff / vocab / experts; FSDP-style extra sharding of large param
+  dims over data.
+* ``SERVE_RULES``: TP over model only; params replicated over (pod, data)
+  so each data replica serves independent requests — this is the replica
+  set the paper's scheduler routes over.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Mapping, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisRules = Mapping[str, Any]  # logical name -> mesh axis | tuple | None
+
+DEFAULT_RULES: AxisRules = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "act_seq": None,  # residual-stream sequence dim (SP shards it)
+    "embed": None,
+    "embed_fsdp": "data",  # FSDP shard of the d_model dim of big params
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ff": "model",
+    "expert_ff": None,
+    "vocab": "model",
+    "experts": "model",
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "conv": None,
+    "layers": None,
+    "cache_seq": None,
+    "cache_batch": ("pod", "data"),
+    "patches": None,
+    "frontend": None,
+}
+
+# Training: FSDP over data + TP over model + Megatron-style sequence
+# parallelism on the residual stream (the per-layer scan carry shrinks by
+# the TP degree — what makes 70B-class train cells fit 16 GB chips).
+TRAIN_RULES: AxisRules = {
+    **DEFAULT_RULES,
+    "act_seq": "model",
+}
+
+# Serving (prefill): params replicated across data replicas (each serves
+# its own requests — the replica set the paper's router schedules over);
+# long prompts are sequence-parallel; the produced KV cache is
+# seq-sharded over model.
+PREFILL_RULES: AxisRules = {
+    **DEFAULT_RULES,
+    "embed_fsdp": None,
+    "act_seq": "model",
+    "cache_seq": "model",
+    "kv_heads": None,  # cache layout: shard seq, replicate (few) kv heads
+}
+
+# Serving (decode): one token, long caches — flash-decoding across chips:
+# the KV cache (and its attention reduction) is sharded over model on the
+# sequence dim; weights stay TP.
+DECODE_RULES: AxisRules = {
+    **PREFILL_RULES,
+    "act_seq": None,
+}
+
+# Training variant (perf iteration C, EXPERIMENTS.md §Perf): keep the
+# sequence dim sharded THROUGH attention and the MLP instead of
+# head/ff-TP — the per-layer collective drops from an all-gather of the
+# full residual stream (B*S*D) to an all-gather of K/V (B*S*KV*Dh,
+# ~G x smaller under GQA); weights are fully sharded over (data, model)
+# jointly (ZeRO-3 style) and gathered per layer.
+TRAIN_RULES_SEQ: AxisRules = {
+    **DEFAULT_RULES,
+    "act_seq": "model",
+    "seq": "model",
+    "heads": None,
+    "kv_heads": None,
+    "ff": None,
+    "expert_ff": None,
+    "vocab": ("data", "model"),
+    "embed_fsdp": ("data", "model"),
+}
+
+RULE_SETS = {
+    "train": TRAIN_RULES,
+    "train_seq": TRAIN_RULES_SEQ,
+    "prefill": PREFILL_RULES,
+    "decode": DECODE_RULES,
+}
+
+SERVE_RULES: AxisRules = PREFILL_RULES  # back-compat alias
+
+
+class _Ctx(threading.local):
+    def __init__(self) -> None:
+        self.mesh: Mesh | None = None
+        self.rules: AxisRules | None = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def use_mesh_rules(mesh: Mesh | None, rules: AxisRules):
+    """Activate (mesh, rules) for :func:`logical` annotations."""
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, rules
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def mesh_axes(mesh: Mesh) -> set[str]:
+    return set(mesh.axis_names)
+
+
+def _resolve(rules: AxisRules, mesh: Mesh, names: Sequence[str | None]) -> P:
+    """Map logical axis names to a PartitionSpec valid on ``mesh``."""
+    axes = mesh_axes(mesh)
+    used: set[str] = set()
+    out = []
+    for name in names:
+        if name is None:
+            out.append(None)
+            continue
+        rule = rules.get(name)
+        if rule is None:
+            out.append(None)
+            continue
+        parts = rule if isinstance(rule, tuple) else (rule,)
+        parts = tuple(p for p in parts if p in axes and p not in used)
+        used.update(parts)
+        if not parts:
+            out.append(None)
+        elif len(parts) == 1:
+            out.append(parts[0])
+        else:
+            out.append(parts)
+    return P(*out)
+
+
+def logical_sharding(
+    names: Sequence[str | None],
+    mesh: Mesh | None = None,
+    rules: AxisRules | None = None,
+) -> NamedSharding | None:
+    """NamedSharding for logical ``names`` under (mesh, rules)."""
+    mesh = mesh or _CTX.mesh
+    rules = rules or _CTX.rules
+    if mesh is None or rules is None:
+        return None
+    return NamedSharding(mesh, _resolve(rules, mesh, names))
+
+
+def logical(x: jax.Array, names: Sequence[str | None]) -> jax.Array:
+    """Annotate ``x`` with a sharding constraint; no-op without a mesh."""
+    s = logical_sharding(names)
+    if s is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, s)
+
+
+def _shard_spec_for_leaf(axes, mesh: Mesh, rules: AxisRules) -> NamedSharding:
+    return NamedSharding(mesh, _resolve(rules, mesh, axes))
+
+
+def divisible_spec(
+    shape: Sequence[int], axes: Sequence[str | None], mesh: Mesh, rules: AxisRules
+) -> P:
+    """PartitionSpec for ``shape`` with divisibility enforcement.
+
+    A mesh axis is only applied to a dim it divides evenly — otherwise the
+    dim falls back to replication (heterogeneous head counts like hymba's
+    25 heads replicate on that dim instead of erroring).
+    """
+    spec = list(_resolve(rules, mesh, axes))
+    shape = tuple(shape)
+    for i, part in enumerate(spec):
+        if part is None:
+            continue
+        parts = part if isinstance(part, tuple) else (part,)
+        size = int(np.prod([mesh.shape[p] for p in parts]))
+        if i >= len(shape) or shape[i] % size != 0:
+            spec[i] = None
+    return P(*spec)
+
+
+def param_shardings(template, mesh: Mesh, rules: AxisRules):
+    """Map a tree whose leaves expose ``.shape`` and ``.axes`` (e.g.
+    :class:`repro.models.common.ParamSpec`) to NamedShardings."""
+
+    def one(leaf):
+        return NamedSharding(mesh, divisible_spec(leaf.shape, leaf.axes, mesh, rules))
+
+    return jax.tree_util.tree_map(one, template, is_leaf=lambda v: hasattr(v, "axes"))

@@ -1,0 +1,13 @@
+from .checkpoint import latest_step, list_steps, restore_checkpoint, save_checkpoint
+from .elastic import ElasticController
+from .health import HeartbeatMonitor, HedgePolicy
+
+__all__ = [
+    "latest_step",
+    "list_steps",
+    "restore_checkpoint",
+    "save_checkpoint",
+    "ElasticController",
+    "HeartbeatMonitor",
+    "HedgePolicy",
+]

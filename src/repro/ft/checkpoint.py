@@ -1,0 +1,137 @@
+"""Sharded, atomic, manifest-driven checkpointing.
+
+Layout::
+
+    <dir>/step_<N>/
+        manifest.json       # step, leaf paths, shapes, dtypes, tree hash
+        leaf_000000.npy ... # one file per pytree leaf (process-local shard)
+
+Writes go to ``<dir>/.tmp_step_<N>`` and are atomically renamed — a
+crashed writer never corrupts the latest checkpoint. ``restore`` places
+leaves with the provided shardings (multi-host: each process restores its
+shard; on CPU it degenerates to plain device_put). Retention keeps the
+newest ``keep`` checkpoints.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+
+import jax
+import ml_dtypes
+import numpy as np
+
+
+def _resolve_dtype(name: str) -> np.dtype:
+    """Dtype from manifest string, covering ml_dtypes (bfloat16, fp8...)."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        return np.dtype(getattr(ml_dtypes, name))
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step", "list_steps"]
+
+_MANIFEST = "manifest.json"
+
+
+def _leaf_paths(tree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in leaves], treedef
+
+
+def _tree_signature(names: list[str]) -> str:
+    return hashlib.sha256("\n".join(names).encode()).hexdigest()[:16]
+
+
+def save_checkpoint(directory: str, step: int, tree, *, keep: int = 3) -> str:
+    """Atomically persist ``tree`` at ``step``. Returns the final path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:010d}")
+    tmp = os.path.join(directory, f".tmp_step_{step:010d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    named, _ = _leaf_paths(tree)
+    manifest = {
+        "step": step,
+        "signature": _tree_signature([n for n, _ in named]),
+        "leaves": [],
+    }
+    for i, (name, leaf) in enumerate(named):
+        arr = np.asarray(leaf)
+        fname = f"leaf_{i:06d}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"].append(
+            {"name": name, "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+        )
+    with open(os.path.join(tmp, _MANIFEST), "w") as f:
+        json.dump(manifest, f)
+
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)  # atomic publish
+    _apply_retention(directory, keep)
+    return final
+
+
+def list_steps(directory: str) -> list[int]:
+    if not os.path.isdir(directory):
+        return []
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and os.path.isfile(
+            os.path.join(directory, name, _MANIFEST)
+        ):
+            steps.append(int(name.split("_")[1]))
+    return sorted(steps)
+
+
+def latest_step(directory: str) -> int | None:
+    steps = list_steps(directory)
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(directory: str, tree_like, step: int | None = None,
+                       shardings=None):
+    """Restore into the structure of ``tree_like``.
+
+    ``shardings``: optional matching tree of ``jax.sharding.Sharding`` —
+    leaves are placed directly into their distributed layout.
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:010d}")
+    with open(os.path.join(path, _MANIFEST)) as f:
+        manifest = json.load(f)
+
+    named, treedef = _leaf_paths(tree_like)
+    names = [n for n, _ in named]
+    if manifest["signature"] != _tree_signature(names):
+        raise ValueError(
+            "checkpoint tree structure does not match the target structure"
+        )
+    shard_leaves = (
+        jax.tree_util.tree_leaves(shardings) if shardings is not None else None
+    )
+    leaves = []
+    for i, (entry, (name, like)) in enumerate(zip(manifest["leaves"], named)):
+        arr = np.load(os.path.join(path, entry["file"]))
+        if arr.dtype.kind == "V":  # ml_dtypes round-trip (e.g. bfloat16)
+            arr = arr.view(_resolve_dtype(entry["dtype"]))
+        if shard_leaves is not None:
+            leaves.append(jax.device_put(arr, shard_leaves[i]))
+        else:
+            leaves.append(jax.numpy.asarray(arr))
+    return treedef.unflatten(leaves), step
+
+
+def _apply_retention(directory: str, keep: int) -> None:
+    steps = list_steps(directory)
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(directory, f"step_{s:010d}"), ignore_errors=True)

@@ -1,0 +1,45 @@
+"""Elastic membership: add/remove replicas at runtime.
+
+The paper observes that the long-term scheduling solution only needs
+recomputation "when the network parameters change" — that is exactly a
+membership event. ``ElasticController`` owns the mapping from the fleet's
+device specs to the router's long-term rate table and refreshes it (from
+the cached semi-Markov solutions) on join/leave/failure.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core.network import DeviceSpec
+from ..serving.router import Router
+
+__all__ = ["ElasticController"]
+
+
+@dataclasses.dataclass
+class ElasticController:
+    router: Router
+    specs: list[list[DeviceSpec]]  # [G][R]
+    xi_lim: float = 0.01
+
+    def refresh(self) -> list[np.ndarray]:
+        """Recompute Eq.-(6) numerators for the current membership."""
+        rates = [
+            np.array([d.rate_limits(self.xi_lim).q_lim for d in group])
+            for group in self.specs
+        ]
+        self.router.on_membership_change(rates)
+        return rates
+
+    def join(self, group: int, spec: DeviceSpec) -> np.ndarray:
+        self.specs[group] = list(self.specs[group]) + [spec]
+        return self.refresh()
+
+    def leave(self, group: int, index: int) -> np.ndarray:
+        group_specs = list(self.specs[group])
+        group_specs.pop(index)
+        self.specs[group] = group_specs
+        return self.refresh()

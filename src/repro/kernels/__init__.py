@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the serving substrate's compute hot spots.
+
+The paper's own contribution is scheduler-level (no custom kernel), but
+the inference substrate it assumes (Petals-style transformer serving) is
+kernel-bound; these four cover its hot paths. Each kernel package ships
+`<name>.py` (pl.pallas_call + BlockSpec VMEM tiling), `ops.py` (jit'd
+public wrapper), and `ref.py` (pure-jnp oracle). Kernels target TPU;
+tests validate them in interpret mode on CPU across shape/dtype sweeps
+(tests/test_kernels_*.py).
+"""
+
+__all__ = [
+    "flash_attention",
+    "decode_attention",
+    "rmsnorm",
+    "selective_scan",
+]

@@ -1,0 +1,122 @@
+"""Pallas TPU flash-decode kernel (split-KV) for single-token attention.
+
+One query token attends to a long KV cache. GPU flash-decoding splits the
+KV into chunks reduced by separate thread blocks and merges with a warp
+reduction; the TPU adaptation gives each (batch, kv_head, chunk) grid cell
+an independent partial (m, l, acc) written to HBM, merged afterwards by a
+tiny XLA log-sum-exp combine (DESIGN.md Sec. 7). Per-sequence cache
+lengths (continuous batching) mask invalid and out-of-window positions
+inside the kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    q_ref,  # [1, 1, G, D]
+    k_ref,  # [1, 1, chunk, D]
+    v_ref,
+    len_ref,  # [1, 1] int32
+    m_out,  # [1, 1, 1, G]
+    l_out,  # [1, 1, 1, G]
+    acc_out,  # [1, 1, 1, G, D]
+    *,
+    chunk: int,
+    window: int | None,
+    scale: float,
+):
+    ci = pl.program_id(2)
+    cache_len = len_ref[0, 0]
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # [G, D]
+    k = k_ref[0, 0].astype(jnp.float32)  # [chunk, D]
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [G, chunk]
+    pos = ci * chunk + jax.lax.broadcasted_iota(jnp.int32, (1, chunk), 1)
+    mask = pos < cache_len
+    if window is not None:
+        mask = mask & (pos >= cache_len - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m = jnp.max(s, axis=1)  # [G]
+    p = jnp.where(mask, jnp.exp(s - m[:, None]), 0.0)
+    l = jnp.sum(p, axis=1)
+    acc = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [G, D]
+    m_out[0, 0, 0] = m
+    l_out[0, 0, 0] = l
+    acc_out[0, 0, 0] = acc
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "chunk", "interpret")
+)
+def decode_attention_bhsd(
+    q: jax.Array,  # [B, H, 1, D]
+    k_cache: jax.Array,  # [B, KV, S, D]
+    v_cache: jax.Array,
+    lengths: jax.Array,  # [B] int32 (valid entries incl. current token)
+    *,
+    window: int | None = None,
+    chunk: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, _, D = q.shape
+    _, KV, S, _ = k_cache.shape
+    G = H // KV
+    scale = D**-0.5
+
+    chunk = min(chunk, max(S, 8))
+    pad = -S % chunk
+    if pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    C = (S + pad) // chunk
+
+    qg = q.reshape(B, KV, G, D)
+    lengths2d = lengths.reshape(B, 1).astype(jnp.int32)
+
+    kernel = functools.partial(
+        _decode_kernel, chunk=chunk, window=window, scale=scale
+    )
+    m, l, acc = pl.pallas_call(
+        kernel,
+        grid=(B, KV, C),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, c: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, D), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, D), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, c: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, G), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, 1, G), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, 1, G, D), lambda b, h, c: (b, h, c, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, KV, C, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, KV, C, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, KV, C, G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg.reshape(B, KV, G, D), k_cache, v_cache, lengths2d)
+
+    # Log-sum-exp merge across chunks (tiny XLA reduction).
+    M = jnp.max(m, axis=2, keepdims=True)  # [B,KV,1,G]
+    w = jnp.exp(m - M)  # [B,KV,C,G]
+    denom = jnp.sum(w * l, axis=2)  # [B,KV,G]
+    numer = jnp.sum(w[..., None] * acc, axis=2)  # [B,KV,G,D]
+    out = numer / jnp.maximum(denom[..., None], 1e-30)
+    return out.reshape(B, H, 1, D).astype(q.dtype)

@@ -1,0 +1,57 @@
+"""Public wrapper for flash-decode (model layout [B, 1, H, D])."""
+
+from __future__ import annotations
+
+import jax
+
+from .decode_attention import decode_attention_bhsd
+from .ref import decode_attention_ref as _ref
+
+__all__ = ["decode_attention", "decode_attention_ref"]
+
+
+def decode_attention(
+    q: jax.Array,  # [B, 1, H, D]
+    k_cache: jax.Array,  # [B, S, KV, D]
+    v_cache: jax.Array,
+    lengths: jax.Array,  # [B] or scalar
+    *,
+    window: int | None = None,
+    chunk: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    import jax.numpy as jnp
+
+    B = q.shape[0]
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
+    out = decode_attention_bhsd(
+        q.transpose(0, 2, 1, 3),
+        k_cache.transpose(0, 2, 1, 3),
+        v_cache.transpose(0, 2, 1, 3),
+        lengths,
+        window=window,
+        chunk=chunk,
+        interpret=interpret,
+    )
+    return out.transpose(0, 2, 1, 3)
+
+
+def decode_attention_ref(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    lengths: jax.Array,
+    *,
+    window: int | None = None,
+) -> jax.Array:
+    import jax.numpy as jnp
+
+    B = q.shape[0]
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
+    return _ref(
+        q.transpose(0, 2, 1, 3),
+        k_cache.transpose(0, 2, 1, 3),
+        v_cache.transpose(0, 2, 1, 3),
+        lengths,
+        window=window,
+    ).transpose(0, 2, 1, 3)

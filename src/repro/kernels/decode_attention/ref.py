@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for flash-decode."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,  # [B, H, 1, D]
+    k_cache: jnp.ndarray,  # [B, KV, S, D]
+    v_cache: jnp.ndarray,
+    lengths: jnp.ndarray,  # [B]
+    *,
+    window: int | None = None,
+) -> jnp.ndarray:
+    B, H, _, D = q.shape
+    _, KV, S, _ = k_cache.shape
+    G = H // KV
+    scale = D**-0.5
+
+    qg = q.astype(jnp.float32).reshape(B, KV, G, D) * scale
+    s = jnp.einsum("bkgd,bksd->bkgs", qg, k_cache.astype(jnp.float32))
+    pos = jnp.arange(S)[None, :]
+    mask = pos < lengths[:, None]
+    if window is not None:
+        mask = mask & (pos >= lengths[:, None] - window)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bksd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, H, 1, D).astype(q.dtype)

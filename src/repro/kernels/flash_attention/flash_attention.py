@@ -1,0 +1,172 @@
+"""Pallas TPU flash-attention forward kernel.
+
+TPU-native adaptation (DESIGN.md Sec. 7): (block_q × block_kv) tiles are
+resident in VMEM, the MXU consumes (block, head_dim) matmuls, and the
+online-softmax running state (m, l, acc) lives in VMEM scratch that
+persists across the innermost KV grid dimension (TPU grids execute
+sequentially minor-to-major, replacing the GPU warp-level loop).
+
+Supports: causal masking, GQA (q-head grid indexes its KV head), static
+sliding windows (KV block range is trimmed per q block — out-of-window
+blocks are never touched), and tail padding.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_scr,
+    l_scr,
+    acc_scr,
+    *,
+    block_q: int,
+    block_kv: int,
+    seq_q: int,
+    seq_kv: int,
+    causal: bool,
+    window: int | None,
+    scale: float,
+):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+    n_kv = pl.num_programs(3)
+
+    q_start = qi * block_q
+    kv_start = kj * block_kv
+
+    # KV block range relevant to this q block.
+    if causal:
+        j_last = jnp.minimum((q_start + block_q - 1) // block_kv, n_kv - 1)
+    else:
+        j_last = n_kv - 1
+    if window is not None:
+        j_first = jnp.maximum((q_start - window + 1) // block_kv, 0)
+    else:
+        j_first = 0
+
+    @pl.when(kj == j_first)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when((kj >= j_first) & (kj <= j_last))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale  # [bq, d]
+        k = k_ref[0, 0].astype(jnp.float32)  # [bkv, d]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # [bq, bkv]
+
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+        kv_pos = kv_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+        mask = kv_pos < seq_kv  # tail padding
+        mask = mask & (q_pos < seq_q)
+        if causal:
+            mask = mask & (q_pos >= kv_pos)
+        if window is not None:
+            mask = mask & (q_pos - kv_pos < window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]  # [bq, 1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(kj == j_last)
+    def _finalize():
+        l = l_scr[...]
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal",
+        "window",
+        "block_q",
+        "block_kv",
+        "interpret",
+    ),
+)
+def flash_attention_bhsd(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: [B, H, Sq, D]; k, v: [B, KV, Skv, D]; H = G * KV. Returns like q."""
+    B, H, Sq, D = q.shape
+    _, KV, Skv, _ = k.shape
+    assert H % KV == 0, "GQA requires H % KV == 0"
+    G = H // KV
+    scale = D**-0.5
+
+    block_q = min(block_q, max(Sq, 8))
+    block_kv = min(block_kv, max(Skv, 8))
+    q_pad = -Sq % block_q
+    kv_pad = -Skv % block_kv
+    if q_pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, q_pad), (0, 0)))
+    if kv_pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, kv_pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, kv_pad), (0, 0)))
+    nq = (Sq + q_pad) // block_q
+    nkv = (Skv + kv_pad) // block_kv
+
+    kernel = functools.partial(
+        _attn_kernel,
+        block_q=block_q,
+        block_kv=block_kv,
+        seq_q=Sq,
+        seq_kv=Skv,
+        causal=causal,
+        window=window,
+        scale=scale,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_kv, D), lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, block_kv, D), lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq + q_pad, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    if q_pad:
+        out = out[:, :, :Sq]
+    return out

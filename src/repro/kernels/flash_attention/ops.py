@@ -1,0 +1,59 @@
+"""Jit'd public wrapper for flash attention.
+
+Accepts the model-layout tensors ([B, S, H, D]) and dispatches to the
+Pallas kernel (TPU) or its interpret-mode execution (CPU tests). The
+pure-XLA chunked path lives in :mod:`repro.models.attention`; the jnp
+oracle in :mod:`.ref`.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from .flash_attention import flash_attention_bhsd
+from .ref import attention_ref
+
+__all__ = ["flash_attention", "flash_attention_ref"]
+
+
+def _to_bhsd(x: jax.Array) -> jax.Array:
+    return x.transpose(0, 2, 1, 3)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: [B, Sq, H, D]; k, v: [B, Skv, KV, D] -> [B, Sq, H, D]."""
+    out = flash_attention_bhsd(
+        _to_bhsd(q),
+        _to_bhsd(k),
+        _to_bhsd(v),
+        causal=causal,
+        window=window,
+        block_q=block_q,
+        block_kv=block_kv,
+        interpret=interpret,
+    )
+    return out.transpose(0, 2, 1, 3)
+
+
+def flash_attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+) -> jax.Array:
+    """Oracle with the same [B, S, H, D] signature."""
+    return attention_ref(
+        _to_bhsd(q), _to_bhsd(k), _to_bhsd(v), causal=causal, window=window
+    ).transpose(0, 2, 1, 3)

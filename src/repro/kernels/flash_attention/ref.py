@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the flash-attention kernel (materializes scores)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+) -> jnp.ndarray:
+    """q: [B, H, Sq, D]; k, v: [B, KV, Skv, D]. fp32 reference."""
+    B, H, Sq, D = q.shape
+    _, KV, Skv, _ = k.shape
+    G = H // KV
+    scale = D**-0.5
+
+    qf = q.astype(jnp.float32).reshape(B, KV, G, Sq, D) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qf, kf)
+
+    q_pos = jnp.arange(Sq)[:, None]
+    kv_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask = mask & (q_pos >= kv_pos)
+    if window is not None:
+        mask = mask & (q_pos - kv_pos < window)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", p, vf)
+    return out.reshape(B, H, Sq, D).astype(q.dtype)

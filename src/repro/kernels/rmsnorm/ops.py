@@ -1,0 +1,25 @@
+"""Public wrapper: RMSNorm over the trailing dim of any-rank input."""
+
+from __future__ import annotations
+
+import jax
+
+from .ref import rmsnorm_ref
+from .rmsnorm import rmsnorm_2d
+
+__all__ = ["rmsnorm", "rmsnorm_ref"]
+
+
+def rmsnorm(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    eps: float = 1e-6,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    shape = x.shape
+    out = rmsnorm_2d(
+        x.reshape(-1, shape[-1]), w, eps=eps, block_rows=block_rows, interpret=interpret
+    )
+    return out.reshape(shape)

@@ -1,0 +1,3 @@
+from .ops import selective_scan, selective_scan_ref
+
+__all__ = ["selective_scan", "selective_scan_ref"]

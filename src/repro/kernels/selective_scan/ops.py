@@ -1,0 +1,6 @@
+"""Public wrapper for the chunked selective scan."""
+
+from .ref import selective_scan_ref
+from .selective_scan import selective_scan_pallas as selective_scan
+
+__all__ = ["selective_scan", "selective_scan_ref"]

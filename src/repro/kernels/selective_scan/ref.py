@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the selective scan: plain sequential recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(
+    x: jnp.ndarray,  # [B, S, Din]
+    dt: jnp.ndarray,
+    Bmat: jnp.ndarray,  # [B, S, N]
+    Cmat: jnp.ndarray,
+    A: jnp.ndarray,  # [Din, N]
+    h0: jnp.ndarray | None = None,
+):
+    B, S, Din = x.shape
+    N = A.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((B, Din, N), jnp.float32)
+
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = Bmat.astype(jnp.float32)
+    Cf = Cmat.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(h, t):
+        a = jnp.exp(dtf[:, t, :, None] * Af[None])
+        b = (dtf[:, t] * xf[:, t])[..., None] * Bf[:, t, None, :]
+        h = a * h + b
+        y = jnp.einsum("bdn,bn->bd", h, Cf[:, t])
+        return h, y
+
+    h, ys = jax.lax.scan(step, h0, jnp.arange(S))
+    y = ys.transpose(1, 0, 2).astype(x.dtype)
+    return y, h

@@ -1,0 +1,125 @@
+"""Pallas TPU chunked selective-scan kernel (Mamba-1 recurrence).
+
+TPU-native adaptation of the CUDA selective-scan (DESIGN.md Sec. 7): the
+sequence is processed in chunks along the innermost (sequential) grid
+dimension; within a chunk the recurrence runs as a vectorized associative
+scan over a [chunk, block_d, N] VMEM tile, and the [block_d, N] state is
+carried across chunks in VMEM scratch (no HBM round-trip per step, no
+GPU-style per-thread serial loop).
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * x_t
+    y_t = <h_t, C_t>
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(
+    x_ref,  # [1, chunk, block_d]
+    dt_ref,  # [1, chunk, block_d]
+    b_ref,  # [1, chunk, N]
+    c_ref,  # [1, chunk, N]
+    a_ref,  # [block_d, N]
+    h0_ref,  # [1, block_d, N]
+    y_ref,  # [1, chunk, block_d]
+    hout_ref,  # [1, block_d, N]
+    h_scr,  # VMEM [block_d, N] f32
+):
+    ci = pl.program_id(2)
+    n_chunks = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = h0_ref[0].astype(jnp.float32)
+
+    x = x_ref[0].astype(jnp.float32)  # [chunk, block_d]
+    dt = dt_ref[0].astype(jnp.float32)
+    Bm = b_ref[0].astype(jnp.float32)  # [chunk, N]
+    Cm = c_ref[0].astype(jnp.float32)
+    A = a_ref[...].astype(jnp.float32)  # [block_d, N]
+
+    a = jnp.exp(dt[:, :, None] * A[None])  # [chunk, block_d, N]
+    b = (dt * x)[:, :, None] * Bm[:, None, :]  # [chunk, block_d, N]
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, br + ar * bl
+
+    a_cum, b_cum = jax.lax.associative_scan(combine, (a, b), axis=0)
+    h = a_cum * h_scr[...][None] + b_cum  # [chunk, block_d, N]
+    y_ref[0] = jnp.einsum("cdn,cn->cd", h, Cm).astype(y_ref.dtype)
+    h_scr[...] = h[-1]
+
+    @pl.when(ci == n_chunks - 1)
+    def _final():
+        hout_ref[0] = h_scr[...].astype(hout_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "block_d", "interpret")
+)
+def selective_scan_pallas(
+    x: jax.Array,  # [B, S, Din]
+    dt: jax.Array,  # [B, S, Din]
+    Bmat: jax.Array,  # [B, S, N]
+    Cmat: jax.Array,  # [B, S, N]
+    A: jax.Array,  # [Din, N]
+    h0: jax.Array | None = None,  # [B, Din, N]
+    *,
+    chunk: int = 128,
+    block_d: int = 512,
+    interpret: bool = False,
+):
+    """Returns (y [B, S, Din], h_final [B, Din, N])."""
+    B, S, Din = x.shape
+    N = A.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((B, Din, N), jnp.float32)
+
+    chunk = min(chunk, S)
+    block_d = min(block_d, Din)
+    s_pad = -S % chunk
+    d_pad = -Din % block_d
+    if s_pad or d_pad:
+        x = jnp.pad(x, ((0, 0), (0, s_pad), (0, d_pad)))
+        dt = jnp.pad(dt, ((0, 0), (0, s_pad), (0, d_pad)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, s_pad), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, s_pad), (0, 0)))
+    if d_pad:
+        A = jnp.pad(A, ((0, d_pad), (0, 0)))
+        h0 = jnp.pad(h0, ((0, 0), (0, d_pad), (0, 0)))
+    Sp, Dp = S + s_pad, Din + d_pad
+    n_chunks, n_d = Sp // chunk, Dp // block_d
+
+    y, h_final = pl.pallas_call(
+        _scan_kernel,
+        grid=(B, n_d, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((1, chunk, block_d), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((1, chunk, N), lambda b, d, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, d, c: (b, c, 0)),
+            pl.BlockSpec((block_d, N), lambda b, d, c: (d, 0)),
+            pl.BlockSpec((1, block_d, N), lambda b, d, c: (b, d, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((1, block_d, N), lambda b, d, c: (b, d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Sp, Dp), x.dtype),
+            jax.ShapeDtypeStruct((B, Dp, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_d, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, Bmat, Cmat, A, h0)
+
+    return y[:, :S, :Din], h_final[:, :Din]

@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (required for the dry-run's placeholder-device
+environment variable to take effect first).
+
+Meshes:
+  * single-pod: (data=16, model=16) — 256 chips (one v5e pod)
+  * multi-pod:  (pod=2, data=16, model=16) — 512 chips across 2 pods
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1x1 mesh for CPU tests/examples (same axis names)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,85 @@
+"""Training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b \
+        --smoke --steps 50 --batch 4 --seq 64 --ckpt-dir /tmp/ckpt
+
+On a real TPU fleet the same driver runs under the production mesh
+(``--mesh single|multi``); on CPU (tests/examples) use ``--smoke`` for the
+reduced config on the host mesh. Checkpoints restore automatically on
+restart (fault tolerance: kill it mid-run and relaunch).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+
+from ..configs import ARCH_NAMES, get_config, get_smoke_config
+from ..distributed.sharding import TRAIN_RULES, use_mesh_rules
+from ..ft.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from ..models import build_model, init_from_template
+from ..training import (
+    AdamWConfig,
+    SyntheticLM,
+    init_train_state,
+    make_batch,
+    make_train_step,
+)
+from .mesh import make_host_mesh, make_production_mesh
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES, default="stablelm-1.6b")
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--mesh", choices=["host", "single", "multi"], default="host")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    cfg = dataclasses.replace(cfg, dtype="float32", param_dtype="float32")
+    model = build_model(cfg)
+
+    mesh = {
+        "host": make_host_mesh,
+        "single": make_production_mesh,
+        "multi": lambda: make_production_mesh(multi_pod=True),
+    }[args.mesh]()
+
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=5, total_steps=args.steps)
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq, global_batch=args.batch)
+
+    with use_mesh_rules(mesh, TRAIN_RULES):
+        params = init_from_template(model.template, jax.random.PRNGKey(0), cfg.param_dtype)
+        state = init_train_state(model, params)
+        start = 0
+        if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+            state, start = restore_checkpoint(args.ckpt_dir, state)
+            print(f"restored checkpoint at step {start}")
+        step_fn = jax.jit(make_train_step(model, opt_cfg))
+
+        t0 = time.time()
+        for i in range(start, args.steps):
+            state, metrics = step_fn(state, make_batch(cfg, data, i))
+            if (i + 1) % 10 == 0 or i == start:
+                print(
+                    f"step {i+1:4d} loss={float(metrics['loss']):.4f} "
+                    f"gnorm={float(metrics['grad_norm']):.2f} "
+                    f"lr={float(metrics['lr']):.2e}"
+                )
+            if args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
+                save_checkpoint(args.ckpt_dir, i + 1, state)
+        dt = time.time() - t0
+        print(f"done: {args.steps - start} steps in {dt:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

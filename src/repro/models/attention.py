@@ -1,0 +1,349 @@
+"""Attention: GQA with RoPE, chunked online-softmax (flash-style) XLA
+path, sliding windows, and single-token decode against a KV cache.
+
+The chunked path never materializes the full [S, S] score matrix: it
+scans KV chunks carrying running (max, denom, accumulator) — the same
+algorithm the Pallas kernel (:mod:`repro.kernels.flash_attention`)
+implements with VMEM tiles, so it doubles as the kernel's oracle at the
+model level.
+
+Sliding windows are dynamic values (not static branches) so layer stacks
+with mixed window/global layers (hymba) run under one ``lax.scan``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import logical
+from .common import ModelConfig, ParamSpec
+from .layers import apply_rope, rmsnorm
+
+__all__ = [
+    "attn_template",
+    "attention_block",
+    "cross_attention_block",
+    "project_kv",
+    "chunked_attention",
+    "decode_attention",
+    "NEG_INF",
+]
+
+NEG_INF = -1e30
+
+
+def attn_template(cfg: ModelConfig, n_layers: int | None = None) -> dict:
+    L = n_layers if n_layers is not None else cfg.n_layers
+    D, H, KV, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    t = {
+        "wq": ParamSpec((L, D, H, Dh), ("layers", "embed_fsdp", "heads", "head_dim")),
+        "wk": ParamSpec((L, D, KV, Dh), ("layers", "embed_fsdp", "kv_heads", "head_dim")),
+        "wv": ParamSpec((L, D, KV, Dh), ("layers", "embed_fsdp", "kv_heads", "head_dim")),
+        "wo": ParamSpec((L, H, Dh, D), ("layers", "heads", "head_dim", "embed_fsdp")),
+    }
+    if cfg.qkv_bias:
+        t["bq"] = ParamSpec((L, H, Dh), ("layers", "heads", "head_dim"), init="zeros")
+        t["bk"] = ParamSpec((L, KV, Dh), ("layers", "kv_heads", "head_dim"), init="zeros")
+        t["bv"] = ParamSpec((L, KV, Dh), ("layers", "kv_heads", "head_dim"), init="zeros")
+    if cfg.qk_norm:
+        t["q_norm"] = ParamSpec((L, Dh), ("layers", "head_dim"), init="ones")
+        t["k_norm"] = ParamSpec((L, Dh), ("layers", "head_dim"), init="ones")
+    return t
+
+
+def _project_qkv(x, p, cfg: ModelConfig, positions):
+    """x [B,S,D] -> q [B,S,H,Dh], k/v [B,S,KV,Dh] with RoPE applied."""
+    dtype = cfg.compute_dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dtype)
+        k = k + p["bk"].astype(dtype)
+        v = v + p["bv"].astype(dtype)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.rms_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.rms_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: jax.Array | int | None = None,
+    chunk: int = 1024,
+    q_offset: jax.Array | int = 0,
+    kv_stream: bool = False,
+) -> jax.Array:
+    """Online-softmax attention over KV chunks (no [S,S] materialization).
+
+    q: [B,Sq,H,Dh]; k, v: [B,Skv,KV,Dh]; H = G * KV (GQA).
+    ``window``: dynamic sliding-window size (None/huge = full attention).
+    ``q_offset``: absolute position of q[0] (prefill continuation).
+    ``kv_stream``: slice K/V per chunk inside the scan (no stacked
+    transposed copies of the whole K/V) and keep dot operands bf16 with
+    fp32 accumulation — see EXPERIMENTS.md §Perf.
+    Returns [B,Sq,H,Dh].
+    """
+    B, Sq, H, Dh = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    scale = Dh**-0.5
+    if window is None:
+        window = jnp.int32(2**30)
+    window = jnp.asarray(window, jnp.int32)
+    q_offset = jnp.asarray(q_offset, jnp.int32)
+
+    q_pos = q_offset + jnp.arange(Sq, dtype=jnp.int32)
+
+    chunk = min(chunk, Skv)
+    n_chunks = -(-Skv // chunk)
+    pad = n_chunks * chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    if kv_stream:
+        qg = (q.astype(jnp.float32) * scale).astype(q.dtype).reshape(B, Sq, KV, G, Dh)
+    else:
+        qg = q.reshape(B, Sq, KV, G, Dh).astype(jnp.float32) * scale
+        # [C, B, chunk, KV, Dh] chunks as scan inputs (baseline: one
+        # transposed copy of K and V).
+        kc = k.reshape(B, n_chunks, chunk, KV, Dh).transpose(1, 0, 2, 3, 4)
+        vc = v.reshape(B, n_chunks, chunk, KV, Dh).transpose(1, 0, 2, 3, 4)
+
+    def attend(carry, ci, k_i, v_i):
+        m, l, acc = carry
+        kv_pos = ci * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        if kv_stream:
+            s = jnp.einsum(
+                "bqkgd,bckd->bqkgc", qg, k_i, preferred_element_type=jnp.float32
+            )
+        else:
+            s = jnp.einsum("bqkgd,bckd->bqkgc", qg, k_i.astype(jnp.float32))
+        valid = kv_pos[None, :] < Skv  # padding mask [1, chunk]
+        delta = q_pos[:, None] - kv_pos[None, :]  # [Sq, chunk]
+        mask = valid
+        if causal:
+            mask = mask & (delta >= 0)
+        mask = mask & (delta < window)
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_i = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m, m_i)
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        if kv_stream:
+            pv = jnp.einsum(
+                "bqkgc,bckd->bqkgd",
+                p.astype(v_i.dtype),
+                v_i,
+                preferred_element_type=jnp.float32,
+            )
+        else:
+            pv = jnp.einsum("bqkgc,bckd->bqkgd", p, v_i.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new)
+
+    m0 = jnp.full((B, Sq, KV, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, KV, G), jnp.float32)
+    acc0 = jnp.zeros((B, Sq, KV, G, Dh), jnp.float32)
+
+    if kv_stream:
+        def body(carry, ci):
+            k_i = jax.lax.dynamic_slice_in_dim(k, ci * chunk, chunk, axis=1)
+            v_i = jax.lax.dynamic_slice_in_dim(v, ci * chunk, chunk, axis=1)
+            return attend(carry, ci, k_i, v_i), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, acc0), jnp.arange(n_chunks, dtype=jnp.int32)
+        )
+    else:
+        def body(carry, inp):
+            ci, k_i, v_i = inp
+            return attend(carry, ci, k_i, v_i), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, acc0), (jnp.arange(n_chunks, dtype=jnp.int32), kc, vc)
+        )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, Sq, H, Dh).astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    cache_len: jax.Array,
+    *,
+    window: jax.Array | int | None = None,
+    mulsum: bool = False,
+    kv_stream: bool = False,
+) -> jax.Array:
+    """One-token attention against a KV cache.
+
+    q: [B,1,H,Dh]; caches: [B,Smax,KV,Dh]; cache_len: scalar int32 —
+    number of valid cache entries *including* the token being decoded.
+
+    ``mulsum=True``: compute scores/output with broadcast multiply +
+    reduce rather than dot_general — GQA decode has arithmetic intensity
+    ~G, far below the MXU roofline, and the dot's batch-dim layout forces
+    XLA to materialize a transposed copy of the whole cache; the VPU
+    mul-reduce streams the cache once in its stored layout.
+    """
+    B, _, H, Dh = q.shape
+    _, Smax, KV, _ = k_cache.shape
+    G = H // KV
+    scale = Dh**-0.5
+    if window is None:
+        window = jnp.int32(2**30)
+    window = jnp.asarray(window, jnp.int32)
+
+    qg = q.reshape(B, KV, G, Dh).astype(jnp.float32) * scale
+    pos = jnp.arange(Smax, dtype=jnp.int32)
+    mask = (pos[None, :] < cache_len) & (pos[None, :] >= cache_len - window)
+    if mulsum:
+        # [B,S,KV,G] = sum_d k[B,S,KV,1,D] * q[B,1,KV,G,D]
+        s = jnp.sum(
+            k_cache.astype(jnp.float32)[:, :, :, None, :]
+            * qg[:, None, :, :, :],
+            axis=-1,
+        )
+        # Anchor the score layout to the cache layout (batch over data,
+        # seq over model) — without this the partitioner replicates the
+        # broadcasted product (iteration 1 regression, EXPERIMENTS.md).
+        s = logical(s, ("cache_batch", "cache_seq", None, None))
+        s = jnp.where(mask[:, :, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=1)
+        out = jnp.sum(
+            p[..., None] * v_cache.astype(jnp.float32)[:, :, :, None, :], axis=1
+        )  # [B,KV,G,D]
+        return out.reshape(B, 1, H, Dh).astype(q.dtype)
+    if kv_stream:
+        # bf16 operands, fp32 accumulation: any layout copies the dot
+        # needs happen at bf16 width (2x less traffic than upcasting the
+        # cache first); MXU accumulates fp32 natively.
+        s = jnp.einsum(
+            "bkgd,bskd->bkgs", qg.astype(k_cache.dtype), k_cache,
+            preferred_element_type=jnp.float32,
+        )
+        s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum(
+            "bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+            preferred_element_type=jnp.float32,
+        )
+        return out.reshape(B, 1, H, Dh).astype(q.dtype)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache.astype(jnp.float32))
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, Dh).astype(q.dtype)
+
+
+def cross_attention_block(
+    x: jax.Array,
+    kv_cache: tuple[jax.Array, jax.Array],
+    p: dict,
+    cfg: ModelConfig,
+):
+    """Cross-attention against precomputed encoder K/V (no RoPE, no mask).
+
+    x: [B,Sq,D]; kv_cache: (k, v) each [B,Skv,KV,Dh] from the encoder.
+    """
+    dtype = cfg.compute_dtype
+    k, v = kv_cache
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dtype)
+    out = chunked_attention(
+        q, k, v, causal=False, window=None, chunk=cfg.attn_chunk
+    )
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dtype))
+
+
+def project_kv(x: jax.Array, p: dict, cfg: ModelConfig):
+    """K/V projections only (encoder output -> cross-attention cache)."""
+    dtype = cfg.compute_dtype
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dtype))
+    if cfg.qkv_bias:
+        k = k + p["bk"].astype(dtype)
+        v = v + p["bv"].astype(dtype)
+    return k, v
+
+
+def _use_interpret() -> bool:
+    """Pallas kernels execute for real on TPU, in interpret mode elsewhere."""
+    return jax.default_backend() != "tpu"
+
+
+def attention_block(
+    x: jax.Array,
+    p: dict,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,
+    window: jax.Array | int | None,
+    cache: tuple[jax.Array, jax.Array, jax.Array] | None = None,
+    causal: bool = True,
+    window_static: int | None = None,
+):
+    """Full attention sub-block: qkv -> attn -> o_proj.
+
+    Without ``cache``: self-attention over x (train/prefill); returns
+    (out, (k, v)) so prefill can populate the cache.
+    With ``cache=(k_cache, v_cache, cache_len)``: single-token decode —
+    computes k/v for the current token, writes them into the cache at
+    ``cache_len - 1``, attends; returns (out, (k_cache, v_cache)).
+    """
+    dtype = cfg.compute_dtype
+    q, k, v = _project_qkv(x, p, cfg, positions)
+    q = logical(q, ("batch", "seq", "heads", "head_dim"))
+    if cache is None:
+        if cfg.attn_impl == "pallas":
+            from ..kernels.flash_attention import flash_attention
+
+            out = flash_attention(
+                q, k, v, causal=causal, window=window_static,
+                interpret=_use_interpret(),
+            )
+        else:
+            out = chunked_attention(
+                q, k, v, causal=causal, window=window, chunk=cfg.attn_chunk,
+                kv_stream=cfg.attn_kv_stream,
+            )
+        out = logical(out, ("batch", "seq", "heads", "head_dim"))
+        o = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dtype))
+        return o, (k, v)
+    if len(cache) == 4:
+        k_cache, v_cache, cache_len, write_idx = cache
+    else:
+        k_cache, v_cache, cache_len = cache
+        write_idx = cache_len - 1  # plain cache: append position
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k.astype(k_cache.dtype), (0, write_idx, 0, 0)
+    )
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v.astype(v_cache.dtype), (0, write_idx, 0, 0)
+    )
+    if cfg.attn_impl == "pallas":
+        from ..kernels.decode_attention import decode_attention as decode_kernel
+
+        out = decode_kernel(
+            q, k_cache, v_cache, cache_len, window=window_static,
+            interpret=_use_interpret(),
+        )
+    else:
+        out = decode_attention(
+            q, k_cache, v_cache, cache_len, window=window,
+            mulsum=cfg.decode_mulsum, kv_stream=cfg.attn_kv_stream,
+        )
+    o = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dtype))
+    return o, (k_cache, v_cache)

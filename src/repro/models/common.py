@@ -1,0 +1,206 @@
+"""Model configuration, parameter templates, and init machinery.
+
+Models are pure-functional JAX: a declarative *parameter template* (a
+pytree of :class:`ParamSpec` leaves) drives three consumers that can never
+diverge:
+
+* :func:`init_from_template` — materialize real parameters;
+* :func:`abstract_params` — ``ShapeDtypeStruct`` stand-ins (dry-run: no
+  allocation);
+* :func:`repro.distributed.sharding.param_shardings` — NamedShardings
+  from each leaf's logical axes.
+
+Layer stacks store parameters stacked on a leading ``layers`` dim and run
+under ``lax.scan`` — keeps the HLO (and SPMD-partitioner work at 512
+devices) small.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "ModelConfig",
+    "ParamSpec",
+    "init_from_template",
+    "abstract_params",
+    "count_params",
+    "template_bytes",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One architecture. Field groups cover every assigned family."""
+
+    name: str
+    family: str  # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: int | None = None  # default: d_model // n_heads
+    act: str = "swiglu"  # swiglu | gelu
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    rms_eps: float = 1e-6
+    tie_embeddings: bool = False
+    # attention pattern
+    attn_window: int | None = None  # sliding-window size (tokens)
+    global_attn_layers: tuple[int, ...] = ()  # full-attn layer ids (window archs)
+    attn_impl: str = "xla"  # xla | pallas (TPU target)
+    attn_chunk: int = 1024  # kv-chunk for the online-softmax XLA path
+    # MoE
+    n_experts: int = 0
+    moe_top_k: int = 0
+    d_ff_expert: int = 0
+    capacity_factor: float = 1.25
+    # SSM (Mamba-1)
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    dt_rank: int | None = None
+    scan_chunk: int = 256  # chunked selective-scan block
+    # block layout
+    block: str = "attn"  # attn | mamba | hymba (parallel attn+ssm)
+    # encoder-decoder (audio family)
+    encoder_layers: int = 0
+    # modality frontend stubs (audio frames / vision patches)
+    frontend: str | None = None  # None | "patches" | "frames"
+    frontend_dim: int = 0
+    n_frontend_tokens: int = 0
+    # pipeline-stage I/O (Petals-style layer groups, serving/partition.py):
+    # a middle stage consumes/produces hidden states instead of tokens/logits.
+    stage_embed: bool = True  # this slice embeds tokens (first stage)
+    stage_unembed: bool = True  # this slice produces logits (last stage)
+    # perf-iteration knobs (EXPERIMENTS.md §Perf):
+    # decode scores/out via broadcast-multiply+reduce instead of dot —
+    # avoids the transposed fp32 cache copy XLA materializes for the
+    # dot's batch-dim layout (decode is bandwidth-bound; VPU mul-reduce
+    # reads the cache exactly once).
+    decode_mulsum: bool = False
+    # ring-buffer update via direct slot indexing instead of roll pairs
+    # (rolls on a seq-sharded ring lower to collective-permute chains).
+    ring_impl: str = "roll"  # roll | index
+    # MoE dispatch: dense one-hot einsums (baseline) vs gather/scatter
+    # (removes the O(T*E*C*D) dispatch matmul FLOPs).
+    moe_impl: str = "einsum"  # einsum | gather
+    # Chunked attention: slice K/V per chunk inside the scan (no stacked
+    # transposed copies) and feed bf16 operands to fp32-accumulating dots
+    # (no fp32 operand materialization).
+    attn_kv_stream: bool = False
+    # numerics
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+    remat: bool = True  # checkpoint layers in train_step
+    # Block remat: checkpoint whole groups of `remat_block` layers — only
+    # one residual carry per group is stored, the rest recomputed in the
+    # backward pass (required for 70B-class train cells on 16 GB chips;
+    # recompute overhead shows up in the roofline's MODEL/HLO FLOP ratio).
+    remat_block: int = 1
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head if self.d_head is not None else self.d_model // self.n_heads
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def dt_rank_actual(self) -> int:
+        return self.dt_rank if self.dt_rank is not None else max(1, self.d_model // 16)
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def window_for_layer(self, layer: int) -> int | None:
+        """Effective attention window for a layer (None = full)."""
+        if self.attn_window is None or layer in self.global_attn_layers:
+            return None
+        return self.attn_window
+
+    def validate(self) -> None:
+        if self.block in ("attn", "hymba") and self.n_heads % self.n_kv_heads != 0:
+            raise ValueError("n_heads must be a multiple of n_kv_heads (GQA)")
+        if self.is_moe and not (0 < self.moe_top_k <= self.n_experts):
+            raise ValueError("need 0 < moe_top_k <= n_experts")
+        if self.block in ("mamba", "hymba") and self.ssm_state <= 0:
+            raise ValueError("ssm blocks need ssm_state > 0")
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declarative parameter leaf: shape + logical axes + initializer."""
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"  # normal | zeros | ones
+    scale: float | None = None  # std for "normal"; default fan-in
+
+    def __post_init__(self) -> None:
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape/axes rank mismatch: {self.shape} vs {self.axes}")
+
+    def initializer_std(self) -> float:
+        if self.scale is not None:
+            return self.scale
+        fan_in = self.shape[-2] if len(self.shape) >= 2 else self.shape[-1]
+        return 1.0 / np.sqrt(max(fan_in, 1))
+
+
+def _is_spec(v: Any) -> bool:
+    return isinstance(v, ParamSpec)
+
+
+def init_from_template(template, key: jax.Array, param_dtype: str = "bfloat16"):
+    """Materialize parameters (deterministic per-leaf keys by path)."""
+    leaves, treedef = jax.tree_util.tree_flatten(template, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    dtype = jnp.dtype(param_dtype)
+
+    def one(spec: ParamSpec, k):
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, dtype)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, dtype)
+        std = spec.initializer_std()
+        return (jax.random.normal(k, spec.shape, jnp.float32) * std).astype(dtype)
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(s, k) for s, k in zip(leaves, keys)]
+    )
+
+
+def abstract_params(template, param_dtype: str = "bfloat16"):
+    """ShapeDtypeStruct tree — dry-run stand-ins, no allocation."""
+    dtype = jnp.dtype(param_dtype)
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), template, is_leaf=_is_spec
+    )
+
+
+def count_params(template) -> int:
+    leaves = jax.tree_util.tree_leaves(template, is_leaf=_is_spec)
+    return int(sum(np.prod(s.shape) for s in leaves))
+
+
+def template_bytes(template, param_dtype: str = "bfloat16") -> int:
+    return count_params(template) * jnp.dtype(param_dtype).itemsize

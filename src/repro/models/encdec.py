@@ -1,0 +1,229 @@
+"""Encoder-decoder transformer (seamless-m4t backbone, [audio] family).
+
+The modality frontend is a STUB per the assignment: the encoder consumes
+precomputed frame embeddings (``batch["frames"]: [B, S_src, frontend_dim]``)
+— a linear projection stands in for the speech feature extractor.
+
+Encoder: bidirectional self-attention layers. Decoder: causal
+self-attention + cross-attention to the encoder output + FFN. Decode
+serves one token against (self-KV cache, precomputed cross-KV cache).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import logical
+from .attention import (
+    attention_block,
+    attn_template,
+    cross_attention_block,
+    project_kv,
+)
+from .common import ModelConfig, ParamSpec
+from .layers import embed_template, mlp_template, rmsnorm, swiglu_mlp, gelu_mlp
+
+__all__ = [
+    "encdec_template",
+    "encode",
+    "forward",
+    "prefill",
+    "decode_step",
+    "init_cache_shapes",
+]
+
+
+def _enc_cfg(cfg: ModelConfig) -> ModelConfig:
+    import dataclasses
+
+    return dataclasses.replace(cfg, n_layers=cfg.encoder_layers)
+
+
+def encdec_template(cfg: ModelConfig) -> dict:
+    cfg.validate()
+    D = cfg.d_model
+    Le, Ld = cfg.encoder_layers, cfg.n_layers
+    enc_cfg = _enc_cfg(cfg)
+    enc_layers = {
+        "ln1": ParamSpec((Le, D), ("layers", "embed"), init="ones"),
+        "attn": attn_template(enc_cfg, n_layers=Le),
+        "ln2": ParamSpec((Le, D), ("layers", "embed"), init="ones"),
+        "mlp": {
+            k: ParamSpec((Le,) + v.shape[1:], v.axes, v.init, v.scale)
+            for k, v in mlp_template(enc_cfg).items()
+        },
+    }
+    dec_layers = {
+        "ln1": ParamSpec((Ld, D), ("layers", "embed"), init="ones"),
+        "self_attn": attn_template(cfg, n_layers=Ld),
+        "ln_cross": ParamSpec((Ld, D), ("layers", "embed"), init="ones"),
+        "cross_attn": attn_template(cfg, n_layers=Ld),
+        "ln2": ParamSpec((Ld, D), ("layers", "embed"), init="ones"),
+        "mlp": mlp_template(cfg),
+    }
+    return {
+        "frontend_proj": ParamSpec((cfg.frontend_dim, D), ("frontend", "embed")),
+        "enc_final_norm": ParamSpec((D,), ("embed",), init="ones"),
+        "embed": embed_template(cfg),
+        "encoder": enc_layers,
+        "decoder": dec_layers,
+        "final_norm": ParamSpec((D,), ("embed",), init="ones"),
+    }
+
+
+def _ffn(x, p_layer, cfg: ModelConfig):
+    if cfg.act == "swiglu":
+        return swiglu_mlp(x, p_layer["mlp"], cfg.compute_dtype)
+    return gelu_mlp(x, p_layer["mlp"], cfg.compute_dtype)
+
+
+def encode(params, frames, cfg: ModelConfig):
+    """frames: [B, S_src, frontend_dim] -> encoder output [B, S_src, D]."""
+    dtype = cfg.compute_dtype
+    x = jnp.einsum("bsf,fd->bsd", frames.astype(dtype), params["frontend_proj"].astype(dtype))
+    x = logical(x, ("batch", "act_seq", "embed"))
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    enc_cfg = _enc_cfg(cfg)
+
+    def body(x, p_layer):
+        h = rmsnorm(x, p_layer["ln1"], cfg.rms_eps)
+        out, _ = attention_block(
+            h, p_layer["attn"], enc_cfg,
+            positions=positions, window=None, causal=False,
+        )
+        x = x + out
+        h2 = rmsnorm(x, p_layer["ln2"], cfg.rms_eps)
+        x = x + _ffn(h2, p_layer, cfg)
+        return logical(x, ("batch", "act_seq", "embed")), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return rmsnorm(x, params["enc_final_norm"], cfg.rms_eps)
+
+
+def _decoder_stack(params, x, cfg: ModelConfig, *, positions, enc_out=None,
+                   cross_kv=None, self_cache=None, collect_kv=False):
+    """Shared decoder body. Either enc_out (compute cross-KV per layer) or
+    cross_kv (precomputed, stacked [L,...]) must be provided."""
+
+    def body(x, scanned):
+        if self_cache is None:
+            p_layer = scanned
+            kv = None
+        else:
+            p_layer, c_layer = scanned
+            kv = (c_layer["k"], c_layer["v"], c_layer["len"])
+        h = rmsnorm(x, p_layer["ln1"], cfg.rms_eps)
+        out, new_kv = attention_block(
+            h, p_layer["self_attn"], cfg,
+            positions=positions, window=None, cache=kv, causal=True,
+        )
+        x = x + out
+        hc = rmsnorm(x, p_layer["ln_cross"], cfg.rms_eps)
+        if enc_out is not None:
+            ckv = project_kv(enc_out, p_layer["cross_attn"], cfg)
+        else:
+            ckv = (p_layer["_ck"], p_layer["_cv"])
+        x = x + cross_attention_block(hc, ckv, p_layer["cross_attn"], cfg)
+        h2 = rmsnorm(x, p_layer["ln2"], cfg.rms_eps)
+        x = x + _ffn(h2, p_layer, cfg)
+        x = logical(x, ("batch", "act_seq", "embed"))
+        ys = {}
+        if collect_kv:
+            ys = {"k": new_kv[0], "v": new_kv[1], "ck": ckv[0], "cv": ckv[1]}
+        elif self_cache is not None:
+            ys = {"k": new_kv[0], "v": new_kv[1]}
+        return x, ys
+
+    if self_cache is None:
+        scanned = params["decoder"]
+        if cross_kv is not None:
+            scanned = dict(scanned, _ck=cross_kv[0], _cv=cross_kv[1])
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        return jax.lax.scan(body, x, scanned)
+    scanned_layers = dict(params["decoder"])
+    if cross_kv is not None:
+        scanned_layers = dict(scanned_layers, _ck=cross_kv[0], _cv=cross_kv[1])
+    return jax.lax.scan(body, x, (scanned_layers, self_cache))
+
+
+def forward(params, batch, cfg: ModelConfig):
+    """Teacher forcing: frames + decoder tokens -> logits [B,S_tgt,V]."""
+    enc_out = encode(params, batch["frames"], cfg)
+    tokens = batch["tokens"]
+    dtype = cfg.compute_dtype
+    x = params["embed"]["tok"].astype(dtype)[tokens]
+    x = logical(x, ("batch", "act_seq", "embed"))
+    positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+    x, _ = _decoder_stack(params, x, cfg, positions=positions, enc_out=enc_out)
+    x = rmsnorm(x, params["final_norm"], cfg.rms_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]["tok"].astype(dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["embed"]["lm_head"].astype(dtype))
+    return logical(logits, ("batch", "seq", "vocab")), {"lb_loss": jnp.zeros((), jnp.float32)}
+
+
+def init_cache_shapes(cfg: ModelConfig, batch: int, max_len: int, enc_len: int) -> dict:
+    L, KV, Dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    dt = cfg.compute_dtype
+    return {
+        "len": jax.ShapeDtypeStruct((), jnp.int32),
+        "k": jax.ShapeDtypeStruct((L, batch, max_len, KV, Dh), dt),
+        "v": jax.ShapeDtypeStruct((L, batch, max_len, KV, Dh), dt),
+        "ck": jax.ShapeDtypeStruct((L, batch, enc_len, KV, Dh), dt),
+        "cv": jax.ShapeDtypeStruct((L, batch, enc_len, KV, Dh), dt),
+    }
+
+
+def prefill(params, batch, cfg: ModelConfig, *, max_len: int):
+    """Encode + decoder prompt pass. Returns (logits, cache)."""
+    enc_out = encode(params, batch["frames"], cfg)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    dtype = cfg.compute_dtype
+    x = params["embed"]["tok"].astype(dtype)[tokens]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x, stacked = _decoder_stack(
+        params, x, cfg, positions=positions, enc_out=enc_out, collect_kv=True
+    )
+    x = rmsnorm(x[:, -1:], params["final_norm"], cfg.rms_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]["tok"].astype(dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["embed"]["lm_head"].astype(dtype))
+    pad = [(0, 0), (0, 0), (0, max_len - S), (0, 0), (0, 0)]
+    cache = {
+        "len": jnp.int32(S),
+        "k": jnp.pad(stacked["k"], pad),
+        "v": jnp.pad(stacked["v"], pad),
+        "ck": stacked["ck"],
+        "cv": stacked["cv"],
+    }
+    return logits, cache
+
+
+def decode_step(params, token, cache, cfg: ModelConfig):
+    """One decoder token vs (self cache, cross cache)."""
+    dtype = cfg.compute_dtype
+    x = params["embed"]["tok"].astype(dtype)[token]
+    positions = cache["len"][None].astype(jnp.int32)
+    new_len = cache["len"] + 1
+    x, stacked = _decoder_stack(
+        params, x, cfg,
+        positions=positions,
+        cross_kv=(cache["ck"], cache["cv"]),
+        self_cache={"k": cache["k"], "v": cache["v"],
+                    "len": jnp.broadcast_to(new_len, (cfg.n_layers,))},
+    )
+    x = rmsnorm(x, params["final_norm"], cfg.rms_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]["tok"].astype(dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["embed"]["lm_head"].astype(dtype))
+    new_cache = dict(cache, k=stacked["k"], v=stacked["v"], len=new_len)
+    return logits, new_cache

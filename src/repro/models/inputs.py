@@ -1,0 +1,74 @@
+"""Input specs per (architecture × shape cell).
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (dry-run: weak-type
+correct, shardable, no device allocation); ``make_inputs`` materializes
+small concrete batches for tests/examples.
+
+Modality frontends are stubs per the assignment: [audio] provides
+precomputed frame embeddings, [vlm] precomputed patch embeddings.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ShapeCell
+from .common import ModelConfig
+
+__all__ = ["input_specs", "make_inputs", "ENC_LEN_DECODE"]
+
+# Encoder length backing the cross-attention cache in enc-dec decode cells
+# (a ~100 s utterance at 40 Hz frames; documented in DESIGN.md).
+ENC_LEN_DECODE = 4096
+
+
+def _token_batch(cfg: ModelConfig, B: int, S: int, *, train: bool) -> dict:
+    spec: dict = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if train:
+        spec["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if cfg.frontend == "patches":
+        P = min(cfg.n_frontend_tokens, S)
+        spec["patch_embeds"] = jax.ShapeDtypeStruct(
+            (B, P, cfg.frontend_dim), cfg.compute_dtype
+        )
+    if cfg.is_encdec:
+        spec["frames"] = jax.ShapeDtypeStruct(
+            (B, S, cfg.frontend_dim), cfg.compute_dtype
+        )
+    return spec
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """Abstract inputs for one shape cell.
+
+    train:   {"tokens","labels"[, "frames"|"patch_embeds"]}
+    prefill: {"tokens"[, ...]} over the full seq_len
+    decode:  {"token": [B,1]} (cache specs come from the model registry)
+    """
+    B, S = cell.global_batch, cell.seq_len
+    if cell.kind == "train":
+        return _token_batch(cfg, B, S, train=True)
+    if cell.kind == "prefill":
+        return _token_batch(cfg, B, S, train=False)
+    if cell.kind == "decode":
+        return {"token": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+    raise ValueError(f"unknown cell kind {cell.kind}")
+
+
+def make_inputs(cfg: ModelConfig, cell: ShapeCell, seed: int = 0) -> dict:
+    """Concrete random inputs matching :func:`input_specs`."""
+    rng = np.random.default_rng(seed)
+    specs = input_specs(cfg, cell)
+    out = {}
+    for name, s in specs.items():
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            out[name] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, size=s.shape), dtype=s.dtype
+            )
+        else:
+            out[name] = jnp.asarray(
+                rng.standard_normal(size=s.shape), dtype=jnp.float32
+            ).astype(s.dtype)
+    return out

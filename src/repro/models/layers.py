@@ -1,0 +1,97 @@
+"""Shared layers: norms, RoPE, activations, MLP, embeddings."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import logical
+from .common import ModelConfig, ParamSpec
+
+__all__ = [
+    "rmsnorm",
+    "apply_rope",
+    "rope_freqs",
+    "swiglu_mlp",
+    "gelu_mlp",
+    "mlp_template",
+    "embed_template",
+]
+
+
+def rmsnorm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm with fp32 accumulation."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies for rotary embeddings [head_dim/2]."""
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(
+    x: jax.Array, positions: jax.Array, theta: float
+) -> jax.Array:
+    """Rotary position embedding.
+
+    x: [..., seq, heads, head_dim]; positions: [..., seq] (int).
+    """
+    head_dim = x.shape[-1]
+    inv = rope_freqs(head_dim, theta)  # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * inv  # [..., seq, hd/2]
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_template(cfg: ModelConfig, n_layers: int | None = None) -> dict:
+    L = n_layers if n_layers is not None else cfg.n_layers
+    D, F = cfg.d_model, cfg.d_ff
+    if cfg.act == "swiglu":
+        return {
+            "wi_gate": ParamSpec((L, D, F), ("layers", "embed_fsdp", "ff")),
+            "wi_up": ParamSpec((L, D, F), ("layers", "embed_fsdp", "ff")),
+            "wo": ParamSpec((L, F, D), ("layers", "ff", "embed_fsdp")),
+        }
+    return {
+        "wi": ParamSpec((L, D, F), ("layers", "embed_fsdp", "ff")),
+        "wo": ParamSpec((L, F, D), ("layers", "ff", "embed_fsdp")),
+    }
+
+
+def swiglu_mlp(x: jax.Array, p: dict, dtype) -> jax.Array:
+    """SwiGLU feed-forward (LLaMA-style). x: [B,S,D]; p leaves unstacked."""
+    gate = jnp.einsum("bsd,df->bsf", x, p["wi_gate"].astype(dtype))
+    up = jnp.einsum("bsd,df->bsf", x, p["wi_up"].astype(dtype))
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(dtype) * up
+    h = logical(h, ("batch", "seq", "ff"))
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(dtype))
+
+
+def gelu_mlp(x: jax.Array, p: dict, dtype) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(dtype))
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(dtype)
+    h = logical(h, ("batch", "seq", "ff"))
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(dtype))
+
+
+def embed_template(cfg: ModelConfig) -> dict:
+    t = {
+        "tok": ParamSpec(
+            (cfg.vocab_size, cfg.d_model), ("vocab", "embed"), scale=1.0
+        )
+    }
+    if not cfg.tie_embeddings:
+        t["lm_head"] = ParamSpec((cfg.d_model, cfg.vocab_size), ("embed_fsdp", "vocab"))
+    return t

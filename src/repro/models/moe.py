@@ -1,0 +1,134 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-bounded einsum
+dispatch (GShard/Switch style).
+
+The dispatch is expressed as dense one-hot einsums so it lowers cleanly
+under pjit: with experts sharded over the ``model`` mesh axis and tokens
+over ``data``, XLA inserts the canonical all-to-all pair around the
+expert computation. Tokens over capacity are dropped (residual passes
+them through); top-k gate values are renormalized.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import logical
+from .common import ModelConfig, ParamSpec
+
+__all__ = ["moe_template", "moe_ffn", "load_balance_loss"]
+
+
+def moe_template(cfg: ModelConfig, n_layers: int | None = None) -> dict:
+    L = n_layers if n_layers is not None else cfg.n_layers
+    D, E, Fe = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    return {
+        "router": ParamSpec((L, D, E), ("layers", "embed", None), scale=0.02),
+        "wi_gate": ParamSpec((L, E, D, Fe), ("layers", "experts", "embed_fsdp", "expert_ff")),
+        "wi_up": ParamSpec((L, E, D, Fe), ("layers", "experts", "embed_fsdp", "expert_ff")),
+        "wo": ParamSpec((L, E, Fe, D), ("layers", "experts", "expert_ff", "embed_fsdp")),
+    }
+
+
+def _route(x, p, cfg: ModelConfig):
+    """Shared routing: top-k gates, per-expert positions, keep mask."""
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.moe_top_k
+    T = B * S
+    xt = x.reshape(T, D)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)  # [T,E] fp32
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # [T,k]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    capacity = max(1, int(cfg.capacity_factor * k * T / E))
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)  # [T,k,E]
+    # Position of each assignment within its expert's buffer. Choice-major
+    # priority (all 1st choices first), GShard-style.
+    flat = onehot.transpose(1, 0, 2).reshape(k * T, E)
+    pos_flat = jnp.cumsum(flat, axis=0) - flat  # position BEFORE this entry
+    pos = (pos_flat * flat).sum(-1).reshape(k, T).T  # [T,k]
+    keep = pos < capacity
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+    return xt, probs, gate_vals, expert_idx, onehot, pos, keep, capacity
+
+
+def _expert_ffn(expert_in, p, cfg: ModelConfig):
+    dtype = cfg.compute_dtype
+    gate = jnp.einsum("ecd,edf->ecf", expert_in, p["wi_gate"].astype(dtype))
+    up = jnp.einsum("ecd,edf->ecf", expert_in, p["wi_up"].astype(dtype))
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(dtype) * up
+    h = logical(h, ("experts", None, "expert_ff"))
+    return jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(dtype))
+
+
+def moe_ffn(x: jax.Array, p: dict, cfg: ModelConfig):
+    """x: [B,S,D] -> (out [B,S,D], aux metrics dict).
+
+    p leaves are per-layer (unstacked): router [D,E], wi_* [E,D,Fe], wo
+    [E,Fe,D]. Dispatch implementation per ``cfg.moe_impl``:
+
+    * "einsum" (baseline, GShard-style): one-hot [T,E,C] dispatch/combine
+      matmuls — simple and shardable, but costs O(T*E*C*D) dense FLOPs
+      that dwarf the expert math at scale;
+    * "gather": slot tables built from the same routing, token rows
+      gathered into [E,C,D] and scatter-added back — O(E*C*D) data
+      movement, no dispatch FLOPs (see EXPERIMENTS.md §Perf).
+    """
+    B, S, D = x.shape
+    dtype = cfg.compute_dtype
+    xt, probs, gate_vals, expert_idx, onehot, pos, keep, capacity = _route(x, p, cfg)
+    T = xt.shape[0]
+    E, k = cfg.n_experts, cfg.moe_top_k
+
+    if cfg.moe_impl == "gather":
+        # Slot tables: slot (e, c) -> source token id (T = sentinel/empty).
+        e_flat = expert_idx.T.reshape(-1)  # [k*T] choice-major
+        pos_flat = pos.T.reshape(-1).astype(jnp.int32)
+        tok_flat = jnp.tile(jnp.arange(T, dtype=jnp.int32), k)
+        gate_flat = gate_vals.T.reshape(-1)
+        slot_tok = jnp.full((E, capacity), T, jnp.int32)
+        # Out-of-capacity entries have pos >= capacity -> dropped.
+        slot_tok = slot_tok.at[e_flat, pos_flat].set(tok_flat, mode="drop")
+        slot_gate = jnp.zeros((E, capacity), jnp.float32)
+        slot_gate = slot_gate.at[e_flat, pos_flat].set(gate_flat, mode="drop")
+
+        x_pad = jnp.concatenate([xt, jnp.zeros((1, D), xt.dtype)], axis=0)
+        expert_in = x_pad[slot_tok]  # [E, C, D] gather
+        expert_in = logical(expert_in, ("experts", None, "embed"))
+        expert_out = _expert_ffn(expert_in, p, cfg)
+        weighted = expert_out.astype(jnp.float32) * slot_gate[..., None]
+        y = jnp.zeros((T + 1, D), jnp.float32)
+        y = y.at[slot_tok.reshape(-1)].add(weighted.reshape(-1, D))
+        out = y[:T].astype(dtype)
+    else:
+        pos_clip = jnp.minimum(pos, capacity - 1).astype(jnp.int32)
+        pos_onehot = jax.nn.one_hot(pos_clip, capacity, dtype=jnp.float32)  # [T,k,C]
+        # dispatch[t,e,c] = 1 iff token t goes to expert e at slot c
+        dispatch = jnp.einsum(
+            "tke,tkc->tec", onehot * keep[..., None].astype(jnp.float32), pos_onehot
+        )
+        combine = jnp.einsum(
+            "tke,tkc,tk->tec", onehot, pos_onehot, gate_vals.astype(jnp.float32)
+        )
+        expert_in = jnp.einsum("tec,td->ecd", dispatch.astype(dtype), xt)
+        expert_in = logical(expert_in, ("experts", None, "embed"))
+        expert_out = _expert_ffn(expert_in, p, cfg)
+        out = jnp.einsum("tec,ecd->td", combine.astype(dtype), expert_out)
+
+    aux = {
+        "lb_loss": load_balance_loss(probs, onehot),
+        "dropped_frac": 1.0 - jnp.mean(keep.astype(jnp.float32)),
+    }
+    return out.reshape(B, S, D), aux
+
+
+def load_balance_loss(probs: jax.Array, onehot: jax.Array) -> jax.Array:
+    """Switch-Transformer load-balance loss: E * sum_e f_e * P_e."""
+    E = probs.shape[-1]
+    f = jnp.mean(jnp.sum(onehot, axis=1), axis=0)  # fraction routed per expert
+    p = jnp.mean(probs, axis=0)  # mean router prob per expert
+    return E * jnp.sum(f * p)

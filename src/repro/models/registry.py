@@ -1,0 +1,54 @@
+"""Model registry: one uniform API over all families.
+
+``Model`` bundles the per-family entry points so the launcher, trainer,
+serving engine, and dry-run never branch on family.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+from . import encdec, transformer
+from .common import ModelConfig
+
+__all__ = ["Model", "build_model"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    template: Any  # ParamSpec tree
+    forward: Callable  # (params, batch) -> (logits, aux)
+    prefill: Callable  # (params, batch, max_len) -> (logits, cache)
+    decode_step: Callable  # (params, token, cache) -> (logits, cache)
+    cache_shapes: Callable  # (batch, max_len, [enc_len]) -> SDS tree
+
+    @property
+    def name(self) -> str:
+        return self.cfg.name
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    cfg.validate()
+    if cfg.is_encdec:
+        return Model(
+            cfg=cfg,
+            template=encdec.encdec_template(cfg),
+            forward=lambda p, b: encdec.forward(p, b, cfg),
+            prefill=lambda p, b, max_len: encdec.prefill(p, b, cfg, max_len=max_len),
+            decode_step=lambda p, t, c: encdec.decode_step(p, t, c, cfg),
+            cache_shapes=lambda batch, max_len, enc_len=None: encdec.init_cache_shapes(
+                cfg, batch, max_len, enc_len if enc_len is not None else max_len
+            ),
+        )
+    return Model(
+        cfg=cfg,
+        template=transformer.lm_template(cfg),
+        forward=lambda p, b: transformer.forward(p, b, cfg),
+        prefill=lambda p, b, max_len: transformer.prefill(p, b, cfg, max_len=max_len),
+        decode_step=lambda p, t, c: transformer.decode_step(p, t, c, cfg),
+        cache_shapes=lambda batch, max_len, enc_len=None: transformer.init_cache_shapes(
+            cfg, batch, max_len
+        ),
+    )

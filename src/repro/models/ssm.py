@@ -1,0 +1,205 @@
+"""Mamba-1 selective state-space block (falcon-mamba / hymba substrate).
+
+Prefill/train uses a *chunked* selective scan: within a chunk of
+``cfg.scan_chunk`` tokens the recurrence is evaluated with an associative
+scan held in registers/VMEM; chunk boundaries carry the [d_inner, N]
+state through a sequential ``lax.scan``. This bounds the materialized
+state history to one chunk (the TPU-native answer to Mamba's fused CUDA
+recurrence — see DESIGN.md Sec. 7). Decode is the O(1) single-step
+recurrence over (conv_state, ssm_state).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import logical
+from .common import ModelConfig, ParamSpec
+
+__all__ = [
+    "ssm_template",
+    "mamba_block",
+    "mamba_decode_step",
+    "selective_scan",
+]
+
+
+def ssm_template(cfg: ModelConfig, n_layers: int | None = None) -> dict:
+    L = n_layers if n_layers is not None else cfg.n_layers
+    D = cfg.d_model
+    Din, N, K, R = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv, cfg.dt_rank_actual
+    return {
+        "in_proj_x": ParamSpec((L, D, Din), ("layers", "embed_fsdp", "ssm_inner")),
+        "in_proj_z": ParamSpec((L, D, Din), ("layers", "embed_fsdp", "ssm_inner")),
+        "conv_w": ParamSpec((L, K, Din), ("layers", "conv", "ssm_inner"), scale=0.2),
+        "conv_b": ParamSpec((L, Din), ("layers", "ssm_inner"), init="zeros"),
+        "x_proj_dt": ParamSpec((L, Din, R), ("layers", "ssm_inner", None)),
+        "x_proj_b": ParamSpec((L, Din, N), ("layers", "ssm_inner", "ssm_state")),
+        "x_proj_c": ParamSpec((L, Din, N), ("layers", "ssm_inner", "ssm_state")),
+        "dt_proj": ParamSpec((L, R, Din), ("layers", None, "ssm_inner")),
+        "dt_bias": ParamSpec((L, Din), ("layers", "ssm_inner"), init="zeros"),
+        "A_log": ParamSpec((L, Din, N), ("layers", "ssm_inner", "ssm_state"), init="ones"),
+        "D_skip": ParamSpec((L, Din), ("layers", "ssm_inner"), init="ones"),
+        "out_proj": ParamSpec((L, Din, D), ("layers", "ssm_inner", "embed_fsdp")),
+    }
+
+
+def _ssm_inputs(x_act: jax.Array, p: dict, dtype):
+    """Selective parameters from the activated conv stream.
+
+    x_act: [B,S,Din] -> dt [B,S,Din] (softplus), Bmat/Cmat [B,S,N].
+    """
+    dt_low = jnp.einsum("bsd,dr->bsr", x_act, p["x_proj_dt"].astype(dtype))
+    dt = jnp.einsum("bsr,rd->bsd", dt_low, p["dt_proj"].astype(dtype))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    Bmat = jnp.einsum("bsd,dn->bsn", x_act, p["x_proj_b"].astype(dtype)).astype(
+        jnp.float32
+    )
+    Cmat = jnp.einsum("bsd,dn->bsn", x_act, p["x_proj_c"].astype(dtype)).astype(
+        jnp.float32
+    )
+    return dt, Bmat, Cmat
+
+
+def selective_scan(
+    x_act: jax.Array,
+    dt: jax.Array,
+    Bmat: jax.Array,
+    Cmat: jax.Array,
+    A: jax.Array,
+    h0: jax.Array | None = None,
+    *,
+    chunk: int = 256,
+):
+    """Chunked selective scan.
+
+    x_act, dt: [B,S,Din]; Bmat, Cmat: [B,S,N]; A: [Din,N] (negative).
+    h0: [B,Din,N] initial state. Returns (y [B,S,Din], h_final).
+    """
+    B, S, Din = x_act.shape
+    N = A.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((B, Din, N), jnp.float32)
+
+    chunk = min(chunk, S)
+    n_chunks = -(-S // chunk)
+    pad = n_chunks * chunk - S
+    xf = x_act.astype(jnp.float32)
+    if pad:
+        xf = jnp.pad(xf, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0)))
+
+    def reshape_c(t):  # [B, n_chunks*chunk, ...] -> [n_chunks, B, chunk, ...]
+        return t.reshape(B, n_chunks, chunk, *t.shape[2:]).transpose(
+            1, 0, 2, *range(3, t.ndim + 1)
+        )
+
+    xc, dtc, Bc, Cc = map(reshape_c, (xf, dt, Bmat, Cmat))
+
+    def chunk_body(h, inp):
+        x_i, dt_i, B_i, C_i = inp  # [B,chunk,...]
+        a = jnp.exp(dt_i[..., None] * A)  # [B,chunk,Din,N]
+        b = (dt_i * x_i)[..., None] * B_i[:, :, None, :]  # [B,chunk,Din,N]
+
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, br + ar * bl
+
+        a_cum, b_cum = jax.lax.associative_scan(combine, (a, b), axis=1)
+        hs = a_cum * h[:, None] + b_cum  # [B,chunk,Din,N]
+        y = jnp.einsum("bcdn,bcn->bcd", hs, C_i)
+        return hs[:, -1], y
+
+    h_final, ys = jax.lax.scan(chunk_body, h0, (xc, dtc, Bc, Cc))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, n_chunks * chunk, Din)
+    if pad:
+        y = y[:, :S]
+    return y, h_final
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array, dtype) -> jax.Array:
+    """Depthwise causal 1-D conv. x: [B,S,Din], w: [K,Din]."""
+    K, Din = w.shape
+    out = jax.lax.conv_general_dilated(
+        x.astype(dtype),
+        w[:, None, :].astype(dtype),  # [K, 1, Din] (HIO)
+        window_strides=(1,),
+        padding=[(K - 1, 0)],
+        dimension_numbers=("NHC", "HIO", "NHC"),
+        feature_group_count=Din,
+    )
+    return out + b.astype(dtype)
+
+
+def mamba_block(x: jax.Array, p: dict, cfg: ModelConfig):
+    """Full Mamba-1 block (train/prefill). x: [B,S,D] -> ([B,S,D], cache).
+
+    cache = (conv_tail [B,K-1,Din], h_final [B,Din,N]) for decode resume.
+    """
+    dtype = cfg.compute_dtype
+    x_in = jnp.einsum("bsd,de->bse", x, p["in_proj_x"].astype(dtype))
+    z = jnp.einsum("bsd,de->bse", x, p["in_proj_z"].astype(dtype))
+    x_in = logical(x_in, ("batch", "seq", "ssm_inner"))
+
+    x_conv = _causal_conv(x_in, p["conv_w"], p["conv_b"], dtype)
+    x_act = jax.nn.silu(x_conv.astype(jnp.float32)).astype(dtype)
+
+    dt, Bmat, Cmat = _ssm_inputs(x_act, p, dtype)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    if cfg.attn_impl == "pallas":
+        from ..kernels.selective_scan import selective_scan as scan_kernel
+
+        y, h_final = scan_kernel(
+            x_act.astype(jnp.float32), dt, Bmat, Cmat, A,
+            chunk=cfg.scan_chunk,
+            interpret=jax.default_backend() != "tpu",
+        )
+        y = y.astype(jnp.float32)
+    else:
+        y, h_final = selective_scan(
+            x_act, dt, Bmat, Cmat, A, chunk=cfg.scan_chunk
+        )
+    y = y + p["D_skip"].astype(jnp.float32) * x_act.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(dtype))
+
+    K = cfg.ssm_conv
+    S = x_in.shape[1]
+    if K > 1:
+        if S >= K - 1:
+            conv_tail = x_in[:, -(K - 1):, :]
+        else:  # short prompt: left-pad with zeros
+            conv_tail = jnp.pad(x_in, ((0, 0), (K - 1 - S, 0), (0, 0)))
+    else:
+        conv_tail = x_in[:, :0, :]
+    return out, (conv_tail, h_final)
+
+
+def mamba_decode_step(x: jax.Array, p: dict, cfg: ModelConfig, cache):
+    """O(1) decode. x: [B,1,D]; cache = (conv_state [B,K-1,Din], h [B,Din,N])."""
+    dtype = cfg.compute_dtype
+    conv_state, h = cache
+    x_in = jnp.einsum("bsd,de->bse", x, p["in_proj_x"].astype(dtype))  # [B,1,Din]
+    z = jnp.einsum("bsd,de->bse", x, p["in_proj_z"].astype(dtype))
+
+    window = jnp.concatenate([conv_state.astype(dtype), x_in], axis=1)  # [B,K,Din]
+    w = p["conv_w"].astype(dtype)  # [K,Din]
+    x_conv = jnp.einsum("bkd,kd->bd", window, w)[:, None, :] + p["conv_b"].astype(dtype)
+    x_act = jax.nn.silu(x_conv.astype(jnp.float32)).astype(dtype)
+
+    dt, Bmat, Cmat = _ssm_inputs(x_act, p, dtype)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt[:, 0, :, None] * A)  # [B,Din,N]
+    b = (dt[:, 0] * x_act.astype(jnp.float32)[:, 0])[..., None] * Bmat[:, 0, None, :]
+    h_new = a * h + b
+    y = jnp.einsum("bdn,bn->bd", h_new, Cmat[:, 0])[:, None, :]
+    y = y + p["D_skip"].astype(jnp.float32) * x_act.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(dtype))
+
+    conv_state_new = window[:, 1:, :] if cfg.ssm_conv > 1 else conv_state
+    return out, (conv_state_new, h_new)

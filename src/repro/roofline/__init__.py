@@ -1,0 +1,4 @@
+from . import hw
+from .analysis import HloCost, RooflineTerms, analyze_hlo, roofline_terms
+
+__all__ = ["hw", "HloCost", "RooflineTerms", "analyze_hlo", "roofline_terms"]

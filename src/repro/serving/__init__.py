@@ -1,0 +1,16 @@
+from .budget import ReplicaBudget
+from .engine import PipelineServer, Request, ServerStats
+from .partition import partition_model, slice_stage_params, stage_configs
+from .router import RouteError, Router
+
+__all__ = [
+    "ReplicaBudget",
+    "PipelineServer",
+    "Request",
+    "ServerStats",
+    "partition_model",
+    "slice_stage_params",
+    "stage_configs",
+    "RouteError",
+    "Router",
+]

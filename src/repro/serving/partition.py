@@ -1,0 +1,108 @@
+"""Petals-style pipeline partitioning: split a decoder-only model into G
+contiguous layer groups (stages). Each group is itself a full ``Model``
+whose first/last stages keep the embedding/unembedding; middle stages
+exchange hidden states — exactly the paper's "groups of devices, identical
+portions of the LLM layers replicated within a group".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from ..models.common import ModelConfig
+from ..models.registry import Model, build_model
+from ..models.transformer import layer_plan
+
+__all__ = ["stage_configs", "slice_stage_params", "partition_model"]
+
+
+def _stage_ranges(n_layers: int, n_stages: int) -> list[tuple[int, int]]:
+    base, rem = divmod(n_layers, n_stages)
+    ranges = []
+    start = 0
+    for g in range(n_stages):
+        size = base + (1 if g < rem else 0)
+        ranges.append((start, start + size))
+        start += size
+    return ranges
+
+
+def stage_configs(cfg: ModelConfig, n_stages: int) -> list[ModelConfig]:
+    """Per-stage configs with remapped window-class layer ids."""
+    if cfg.is_encdec:
+        raise NotImplementedError("pipeline partitioning targets decoder-only archs")
+    out = []
+    for g, (start, end) in enumerate(_stage_ranges(cfg.n_layers, n_stages)):
+        globals_in_range = tuple(
+            l - start for l in cfg.global_attn_layers if start <= l < end
+        )
+        out.append(
+            dataclasses.replace(
+                cfg,
+                name=f"{cfg.name}/stage{g}",
+                n_layers=end - start,
+                global_attn_layers=globals_in_range,
+                stage_embed=(g == 0),
+                stage_unembed=(g == n_stages - 1),
+                tie_embeddings=cfg.tie_embeddings,
+            )
+        )
+    return out
+
+
+def slice_stage_params(cfg: ModelConfig, params, n_stages: int) -> list:
+    """Slice the full model's parameters into per-stage trees.
+
+    Class stacks are sliced along the leading layer axis; the embedding
+    goes to stage 0 (and, when tied, to the last stage too), final norm /
+    lm_head to the last stage.
+    """
+    full_plan = layer_plan(cfg)
+    stage_cfgs = stage_configs(cfg, n_stages)
+    ranges = _stage_ranges(cfg.n_layers, n_stages)
+    out = []
+    for g, ((start, end), s_cfg) in enumerate(zip(ranges, stage_cfgs)):
+        s_plan = layer_plan(s_cfg)
+        classes = {}
+        for si, s_cls in enumerate(s_plan.classes):
+            # Find the matching full-model class (same window).
+            fi = next(
+                i for i, c in enumerate(full_plan.classes) if c.window == s_cls.window
+            )
+            f_cls = full_plan.classes[fi]
+            # Positions of this stage's layers inside the full class stack.
+            keep = [
+                pos
+                for pos, l in enumerate(f_cls.layer_ids)
+                if start <= l < end
+            ]
+            lo, hi = keep[0], keep[-1] + 1
+            assert keep == list(range(lo, hi)), "class rows must be contiguous"
+            classes[f"c{si}"] = jax.tree_util.tree_map(
+                lambda a: a[lo:hi], params["classes"][f"c{fi}"]
+            )
+        tree = {"classes": classes}
+        emb: dict = {}
+        if s_cfg.stage_embed or (s_cfg.stage_unembed and s_cfg.tie_embeddings):
+            emb["tok"] = params["embed"]["tok"]
+        if s_cfg.stage_unembed and not s_cfg.tie_embeddings:
+            emb["lm_head"] = params["embed"]["lm_head"]
+        if emb:
+            tree["embed"] = emb
+        if s_cfg.stage_unembed:
+            tree["final_norm"] = params["final_norm"]
+        if s_cfg.stage_embed and cfg.frontend == "patches":
+            tree["vision_proj"] = params["vision_proj"]
+        out.append(tree)
+    return out
+
+
+def partition_model(
+    cfg: ModelConfig, params, n_stages: int
+) -> list[tuple[Model, dict]]:
+    """(stage model, stage params) per pipeline group."""
+    cfgs = stage_configs(cfg, n_stages)
+    trees = slice_stage_params(cfg, params, n_stages)
+    return [(build_model(c), p) for c, p in zip(cfgs, trees)]

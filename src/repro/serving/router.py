@@ -1,0 +1,70 @@
+"""Energy-aware replica router — the paper's Algorithm 1 as the serving
+fleet's request router.
+
+Given the per-replica budgets of each pipeline group, the router returns
+which replica serves each stage of a new request, using uniform /
+long-term / adaptive scheduling (:mod:`repro.core.policies`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core.policies import POLICIES
+from .budget import ReplicaBudget
+
+__all__ = ["Router", "RouteError"]
+
+
+class RouteError(RuntimeError):
+    """No available replica in some group — request must be dropped."""
+
+
+@dataclasses.dataclass
+class Router:
+    policy: str = "adaptive"  # uniform | long_term | adaptive
+    long_term_rates: np.ndarray | None = None  # [G, R] q_lims (Eq. 6)
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        if self.policy not in POLICIES:
+            raise ValueError(f"unknown policy {self.policy!r}")
+        self._rng = np.random.default_rng(self.seed)
+
+    def probabilities(self, budgets: list[list[ReplicaBudget]]) -> list[np.ndarray]:
+        """Per-group routing distributions (Alg. 1 lines 7-9).
+
+        Groups may have different replica counts (elastic membership), so
+        the result is a list of per-group vectors.
+        """
+        fn = POLICIES[self.policy]
+        out: list[np.ndarray] = []
+        for g, group in enumerate(budgets):
+            R = len(group)
+            if self.long_term_rates is not None:
+                rates = np.asarray(self.long_term_rates[g], dtype=np.float32)
+            else:
+                rates = np.ones(R, dtype=np.float32)
+            avail = np.array([b.available for b in group])
+            pm = np.array([b.pm for b in group])
+            out.append(np.asarray(fn(rates, pm, avail)))
+        return out
+
+    def route(self, budgets: list[list[ReplicaBudget]]) -> list[int]:
+        """Designate one replica per group for a new request."""
+        probs = self.probabilities(budgets)
+        choice = []
+        for g, p in enumerate(probs):
+            total = p.sum()
+            if total <= 0:
+                raise RouteError(f"no available replica in group {g}")
+            choice.append(int(self._rng.choice(len(p), p=p / total)))
+        return choice
+
+    def on_membership_change(self, rates: np.ndarray | None) -> None:
+        """Elastic event: new long-term rates after add/remove of nodes
+        (the paper recomputes the stationary solution only when network
+        parameters change)."""
+        self.long_term_rates = rates

@@ -1,0 +1,67 @@
+"""Train-step factory: CE loss (vocab-sharded logits, fp32 reductions),
+MoE load-balance auxiliary, AdamW update, metrics.
+
+The returned ``train_step(state, batch)`` is pure (jit/pjit-able); remat
+of each layer is handled inside the model (``cfg.remat``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..models.registry import Model
+from .optimizer import AdamWConfig, adamw_init, adamw_update
+
+__all__ = ["TrainState", "make_train_step", "init_train_state", "cross_entropy"]
+
+MOE_AUX_WEIGHT = 0.01
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: dict
+    step: jax.Array
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean next-token CE in fp32. logits [B,S,V], labels [B,S]."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def init_train_state(model: Model, params: Any) -> TrainState:
+    return TrainState(params=params, opt=adamw_init(params), step=jnp.zeros((), jnp.int32))
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig):
+    moe = model.cfg.is_moe
+
+    def loss_fn(params, batch):
+        logits, aux = model.forward(params, batch)
+        ce = cross_entropy(logits, batch["labels"])
+        loss = ce
+        if moe:
+            loss = loss + MOE_AUX_WEIGHT * aux["lb_loss"]
+        return loss, {"ce": ce, "lb_loss": aux["lb_loss"]}
+
+    def train_step(state: TrainState, batch: dict) -> tuple[TrainState, dict]:
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state.params, batch
+        )
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, state.opt, state.params, opt_cfg
+        )
+        new_state = TrainState(
+            params=new_params, opt=new_opt, step=state.step + 1
+        )
+        return new_state, {"loss": loss, **metrics, **opt_metrics}
+
+    return train_step

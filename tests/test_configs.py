@@ -1,0 +1,87 @@
+"""Config registry tests: exact assigned hyper-parameters, shape cells,
+family skips, and the dry-run helpers that don't need 512 devices."""
+
+import pytest
+
+from repro.configs import ARCH_NAMES, SHAPES, cells_for, get_config, get_smoke_config
+
+
+EXPECTED = {
+    # (layers, d_model, heads, kv, d_ff, vocab)
+    "stablelm-1.6b": (24, 2048, 32, 32, 5632, 100352),
+    "phi4-mini-3.8b": (32, 3072, 24, 8, 8192, 200064),
+    "qwen2.5-14b": (48, 5120, 40, 8, 13824, 152064),
+    "granite-20b": (52, 6144, 48, 1, 24576, 49152),
+    "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+    "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 768, 151936),
+    "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+    "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+    "falcon-mamba-7b": (64, 4096, 1, 1, 0, 65024),
+    "internvl2-76b": (80, 8192, 64, 8, 28672, 128256),
+}
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_exact_assigned_config(name):
+    cfg = get_config(name)
+    L, D, H, KV, F, V = EXPECTED[name]
+    assert cfg.n_layers == L
+    assert cfg.d_model == D
+    assert cfg.n_heads == H
+    assert cfg.n_kv_heads == KV
+    assert cfg.d_ff == F
+    assert cfg.vocab_size == V
+
+
+def test_moe_configs():
+    q = get_config("qwen3-moe-30b-a3b")
+    assert (q.n_experts, q.moe_top_k, q.d_ff_expert) == (128, 8, 768)
+    g = get_config("granite-moe-1b-a400m")
+    assert (g.n_experts, g.moe_top_k, g.d_ff_expert) == (32, 8, 512)
+
+
+def test_ssm_configs():
+    f = get_config("falcon-mamba-7b")
+    assert f.block == "mamba" and f.ssm_state == 16 and f.d_inner == 8192
+    h = get_config("hymba-1.5b")
+    assert h.block == "hymba" and h.ssm_state == 16
+    assert h.attn_window == 1024 and h.global_attn_layers == (0, 15, 31)
+
+
+def test_encdec_config():
+    s = get_config("seamless-m4t-large-v2")
+    assert s.encoder_layers == 24 and s.is_encdec
+
+
+def test_shape_cells():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].global_batch == 1
+
+
+def test_long_context_cells_only_for_subquadratic():
+    """8 full-attention archs skip long_500k; ssm + hybrid run it: 32
+    runnable cells + 8 documented skips = the full 40-cell matrix."""
+    runnable = 0
+    for name in ARCH_NAMES:
+        cells = cells_for(name)
+        runnable += len(cells)
+        if name in ("hymba-1.5b", "falcon-mamba-7b"):
+            assert "long_500k" in cells
+        else:
+            assert "long_500k" not in cells
+    assert runnable == 32
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_smoke_configs_are_reduced(name):
+    full, smoke = get_config(name), get_smoke_config(name)
+    assert smoke.n_layers <= 4
+    assert smoke.d_model <= 128
+    assert smoke.family == full.family
+    assert smoke.block == full.block
+    assert smoke.is_encdec == full.is_encdec
+    assert smoke.is_moe == full.is_moe

@@ -1,0 +1,90 @@
+"""Unit tests for the energy and power-mode substrate."""
+
+import numpy as np
+import pytest
+
+from repro.core.energy import DiscreteMDF, battery_update, convolve_mdf, uniform_mdf
+from repro.core.power import (
+    ORIN_POWER_MODES,
+    PowerMode,
+    dynamic_policy,
+    fixed_policy,
+)
+
+
+class TestMDF:
+    def test_uniform_mdf_mean(self):
+        m = uniform_mdf(6, 10)
+        assert m.mean == pytest.approx(8.0)
+        assert m.array.sum() == pytest.approx(1.0)
+
+    def test_uniform_mdf_support(self):
+        m = uniform_mdf(2, 4)
+        np.testing.assert_allclose(m.array, [0, 0, 1 / 3, 1 / 3, 1 / 3])
+
+    def test_invalid_pmf_rejected(self):
+        with pytest.raises(ValueError):
+            DiscreteMDF((0.5, 0.2))  # doesn't sum to 1
+        with pytest.raises(ValueError):
+            uniform_mdf(5, 3)
+
+    def test_convolution_mean_additivity(self):
+        m = uniform_mdf(6, 10)
+        for k in (1, 2, 3):
+            g = convolve_mdf(m.array, k)
+            assert g.sum() == pytest.approx(1.0)
+            mean = np.dot(np.arange(len(g)), g)
+            assert mean == pytest.approx(k * m.mean)
+
+    def test_convolution_support(self):
+        g = convolve_mdf(uniform_mdf(6, 10).array, 3)
+        # support is 18..30
+        assert g[17] == 0 and g[18] > 0 and g[30] > 0
+        assert len(g) == 31
+
+
+class TestBatteryUpdate:
+    def test_eq1_clamps(self):
+        assert battery_update(50, 10, 5, 100) == 55
+        assert battery_update(95, 10, 0, 100) == 100  # cap
+        assert battery_update(5, 0, 26, 100) == 0  # floor
+
+    def test_eq1_identity(self):
+        assert battery_update(40, 8, 8, 100) == 40
+
+
+class TestPowerModes:
+    def test_orin_table_matches_paper(self):
+        # 15 W -> (300 s, 26 kJ); 30 W -> (200 s, 22 kJ); 60 W -> (100 s, 23 kJ)
+        kappas = [m.kappa for m in ORIN_POWER_MODES]
+        ces = [m.ce for m in ORIN_POWER_MODES]
+        assert kappas == [3, 2, 1]
+        assert ces == [26, 22, 23]
+        # 50 W excluded as dominated by 30 W (paper Sec. V)
+        assert all(m.watts != 50.0 for m in ORIN_POWER_MODES)
+
+    def test_fixed_policy(self):
+        pol = fixed_policy(2)
+        for e in (0, 50, 100):
+            assert pol.pm_for_energy(e) == 2
+        assert pol.kappa_for_energy(0) == 2
+        assert pol.ce_for_energy(0) == 22
+
+    def test_dynamic_policy_thresholds(self):
+        pol = dynamic_policy(e_max=100)
+        # E < 40 -> PM1 (15 W); 40 <= E < 60 -> PM2 (30 W); E >= 60 -> PM3.
+        assert pol.pm_for_energy(0) == 1
+        assert pol.pm_for_energy(39) == 1
+        assert pol.pm_for_energy(40) == 2
+        assert pol.pm_for_energy(59) == 2
+        assert pol.pm_for_energy(60) == 3
+        assert pol.pm_for_energy(100) == 3
+
+    def test_dynamic_policy_vectorized(self):
+        pol = dynamic_policy(e_max=100)
+        out = pol.pm_for_energy(np.array([0, 40, 60, 100]))
+        np.testing.assert_array_equal(out, [1, 2, 3, 3])
+
+    def test_invalid_mode(self):
+        with pytest.raises(ValueError):
+            PowerMode("x", 1.0, kappa=0, ce=1)

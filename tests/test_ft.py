@@ -1,0 +1,100 @@
+"""Fault-tolerance layer tests: checkpoint round-trip/atomicity/retention,
+heartbeats, hedging, elastic rate refresh."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.network import DeviceSpec
+from repro.core.power import dynamic_policy
+from repro.ft import (
+    ElasticController,
+    HeartbeatMonitor,
+    HedgePolicy,
+    latest_step,
+    list_steps,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.serving import Router
+
+
+def tree():
+    return {
+        "a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "nested": {"b": jnp.ones((2, 2), jnp.bfloat16), "c": jnp.int32(7)},
+    }
+
+
+class TestCheckpoint:
+    def test_round_trip(self, tmp_path):
+        t = tree()
+        save_checkpoint(str(tmp_path), 5, t)
+        restored, step = restore_checkpoint(str(tmp_path), t)
+        assert step == 5
+        for a, b in zip(jax.tree_util.tree_leaves(t), jax.tree_util.tree_leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+    def test_latest_and_retention(self, tmp_path):
+        t = tree()
+        for s in (1, 2, 3, 4, 5):
+            save_checkpoint(str(tmp_path), s, t, keep=3)
+        assert list_steps(str(tmp_path)) == [3, 4, 5]
+        assert latest_step(str(tmp_path)) == 5
+
+    def test_structure_mismatch_rejected(self, tmp_path):
+        save_checkpoint(str(tmp_path), 1, tree())
+        with pytest.raises(ValueError):
+            restore_checkpoint(str(tmp_path), {"different": jnp.zeros(3)})
+
+    def test_no_partial_checkpoint_visible(self, tmp_path):
+        """A tmp dir (simulated crash) is never listed as a checkpoint."""
+        save_checkpoint(str(tmp_path), 1, tree())
+        os.makedirs(tmp_path / ".tmp_step_0000000002")
+        assert list_steps(str(tmp_path)) == [1]
+
+    def test_restore_specific_step(self, tmp_path):
+        t = tree()
+        save_checkpoint(str(tmp_path), 1, t, keep=10)
+        t2 = jax.tree_util.tree_map(lambda x: x + 1, t)
+        save_checkpoint(str(tmp_path), 2, t2, keep=10)
+        restored, step = restore_checkpoint(str(tmp_path), t, step=1)
+        assert step == 1
+        np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(t["a"]))
+
+
+class TestHealth:
+    def test_heartbeat_timeout(self):
+        mon = HeartbeatMonitor(timeout=1.0)
+        mon.beat("r0", now=0.0)
+        mon.beat("r1", now=0.9)
+        assert mon.dead(now=1.5) == {"r0"}
+        assert mon.alive("r1", now=1.5)
+
+    def test_hedge_threshold(self):
+        h = HedgePolicy(quantile=0.9, min_samples=5)
+        assert h.should_hedge(10.0) is False  # no data yet
+        for _ in range(20):
+            h.record(1.0)
+        assert h.should_hedge(0.5) is False
+        assert h.should_hedge(1.5) is True
+
+
+class TestElastic:
+    def test_rates_refresh_on_membership_change(self):
+        pol = dynamic_policy(100)
+        spec_rich = DeviceSpec(arrival_lo=10, arrival_hi=14, policy=pol)
+        spec_poor = DeviceSpec(arrival_lo=3, arrival_hi=5, policy=pol)
+        router = Router(policy="long_term")
+        ctl = ElasticController(router, [[spec_rich, spec_poor]])
+        rates = ctl.refresh()
+        assert rates[0][0] > rates[0][1]  # richer node gets higher q_lim
+        rates2 = ctl.join(0, spec_rich)
+        assert len(rates2[0]) == 3
+        rates3 = ctl.leave(0, 1)
+        assert len(rates3[0]) == 2
+        assert router.long_term_rates is not None

@@ -1,0 +1,137 @@
+"""Property-based tests (hypothesis) for the core invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.energy import battery_update, convolve_mdf, uniform_mdf
+from repro.core.policies import adaptive_probs, long_term_probs, uniform_probs
+from repro.core.power import ORIN_POWER_MODES, dynamic_policy, fixed_policy
+from repro.core.rootfind import brentq
+from repro.core.semi_markov import DeviceModel
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@st.composite
+def arrival_bounds(draw):
+    lo = draw(st.integers(min_value=0, max_value=8))
+    hi = draw(st.integers(min_value=lo, max_value=lo + 8))
+    return lo, hi
+
+
+@given(arrival_bounds())
+@settings(**SETTINGS)
+def test_uniform_mdf_is_distribution(bounds):
+    lo, hi = bounds
+    m = uniform_mdf(lo, hi)
+    assert np.isclose(m.array.sum(), 1.0)
+    assert np.all(m.array >= 0)
+    assert np.isclose(m.mean, (lo + hi) / 2)
+
+
+@given(arrival_bounds(), st.integers(min_value=1, max_value=4))
+@settings(**SETTINGS)
+def test_convolution_preserves_mass_and_mean(bounds, k):
+    lo, hi = bounds
+    m = uniform_mdf(lo, hi)
+    g = convolve_mdf(m.array, k)
+    assert np.isclose(g.sum(), 1.0)
+    assert np.isclose(np.dot(np.arange(len(g)), g), k * m.mean)
+
+
+@given(
+    st.integers(min_value=0, max_value=100),
+    st.integers(min_value=0, max_value=40),
+    st.integers(min_value=0, max_value=40),
+    st.integers(min_value=1, max_value=100),
+)
+@settings(**SETTINGS)
+def test_battery_update_bounds(e, income, consumption, e_max):
+    out = battery_update(min(e, e_max), income, consumption, e_max)
+    assert 0 <= out <= e_max
+
+
+@given(
+    arrival_bounds(),
+    st.floats(min_value=0.0, max_value=1.0),
+    st.sampled_from([1, 2, 3]),
+)
+@settings(max_examples=10, deadline=None)
+def test_transition_rows_are_distributions(bounds, q, pm):
+    lo, hi = bounds
+    dev = DeviceModel(
+        mdf=uniform_mdf(lo, hi),
+        policy=fixed_policy(pm),
+        e_max=40,
+        e_th=4,
+        e_th_hi=10,
+    )
+    P = dev.chain(q).transition_matrix()
+    np.testing.assert_allclose(P.sum(axis=1), 1.0, atol=1e-9)
+    assert np.all(P >= 0)
+
+
+@given(arrival_bounds(), st.floats(min_value=0.05, max_value=0.95))
+@settings(max_examples=10, deadline=None)
+def test_stationary_fixed_point(bounds, q):
+    lo, hi = bounds
+    dev = DeviceModel(
+        mdf=uniform_mdf(lo, hi),
+        policy=dynamic_policy(40, ORIN_POWER_MODES),
+        e_max=40,
+        e_th=4,
+        e_th_hi=10,
+    )
+    chain = dev.chain(q)
+    pi = chain.stationary()
+    np.testing.assert_allclose(pi @ chain.transition_matrix(), pi, atol=1e-8)
+    assert np.isclose(pi.sum(), 1.0)
+    assert np.all(pi >= 0)
+    # Risk is a probability; kappa_bar within mode range.
+    assert 0.0 <= chain.risk() <= 1.0
+    kb = chain.kappa_bar()
+    assert 1.0 <= kb <= 3.0
+
+
+@st.composite
+def policy_inputs(draw):
+    n = draw(st.integers(min_value=1, max_value=8))
+    q_lims = draw(
+        st.lists(
+            st.floats(min_value=0.01, max_value=1.0), min_size=n, max_size=n
+        )
+    )
+    pm = draw(st.lists(st.integers(min_value=1, max_value=3), min_size=n, max_size=n))
+    avail = draw(st.lists(st.booleans(), min_size=n, max_size=n))
+    return (
+        jnp.asarray(q_lims, dtype=jnp.float32),
+        jnp.asarray(pm),
+        jnp.asarray(avail),
+    )
+
+
+@given(policy_inputs())
+@settings(**SETTINGS)
+def test_policies_produce_valid_distributions(inputs):
+    q_lims, pm, avail = inputs
+    n_avail = int(jnp.sum(avail))
+    for fn in (uniform_probs, long_term_probs, adaptive_probs):
+        p = np.asarray(fn(q_lims, pm, avail))
+        assert np.all(p >= -1e-7)
+        # No probability mass on unavailable devices.
+        assert np.all(p[~np.asarray(avail)] <= 1e-7)
+        if n_avail > 0:
+            assert np.isclose(p.sum(), 1.0, atol=1e-5)
+
+
+@given(
+    st.floats(min_value=-5.0, max_value=-0.1),
+    st.floats(min_value=0.1, max_value=5.0),
+)
+@settings(**SETTINGS)
+def test_brentq_linear_roots(a, b):
+    # f(x) = x - r with r uniform in (a, b): root recovered.
+    r = (a + b) / 2
+    assert abs(brentq(lambda x: x - r, a, b) - r) < 1e-8

@@ -1,0 +1,81 @@
+"""Roofline analyzer tests: the trip-scaled HLO walker against programs
+with known FLOP counts (XLA's own cost_analysis counts loop bodies once —
+the motivation for the walker; see roofline/analysis.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline.analysis import RooflineTerms, analyze_hlo
+
+
+def compile_text(fn, *specs):
+    return jax.jit(fn).lower(*specs).compile().as_text()
+
+
+class TestWalker:
+    def test_plain_matmul_flops(self):
+        a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+        b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+        hlo = compile_text(lambda x, y: x @ y, a, b)
+        c = analyze_hlo(hlo)
+        assert c.flops == pytest.approx(2 * 64 * 128 * 32, rel=0.05)
+
+    def test_scan_trip_scaling(self):
+        """The critical property: loop bodies scale by trip count."""
+        def f(x, w):
+            def body(c, wi):
+                return c @ wi, ()
+            y, _ = jax.lax.scan(body, x, w)
+            return y
+
+        x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+        w = jax.ShapeDtypeStruct((24, 128, 128), jnp.float32)
+        hlo = compile_text(f, x, w)
+        c = analyze_hlo(hlo)
+        assert c.flops == pytest.approx(2 * 24 * 128**3, rel=0.02)
+
+    def test_nested_scan_trip_scaling(self):
+        def f(x, w):
+            def inner(c, wi):
+                return jnp.tanh(c @ wi), ()
+
+            def outer(c, wc):
+                y, _ = jax.lax.scan(inner, c, wc)
+                return y, ()
+
+            y, _ = jax.lax.scan(outer, x, w.reshape(3, 8, 64, 64))
+            return y
+
+        x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+        w = jax.ShapeDtypeStruct((24, 64, 64), jnp.float32)
+        c = analyze_hlo(compile_text(f, x, w))
+        assert c.flops == pytest.approx(2 * 24 * 64**3, rel=0.05)
+
+    def test_bytes_positive_and_bounded(self):
+        a = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+        hlo = compile_text(lambda x: x + 1.0, a)
+        c = analyze_hlo(hlo)
+        nbytes = 256 * 256 * 4
+        assert nbytes <= c.bytes <= 4 * nbytes
+
+    def test_empty_hlo(self):
+        c = analyze_hlo("")
+        assert c.flops == 0.0
+
+
+class TestTerms:
+    def test_dominant_selection(self):
+        t = RooflineTerms(flops=1e15, hbm_bytes=1e12, collective_bytes=1e13, chips=256)
+        assert t.compute_s > 0
+        assert t.dominant == "collective"
+        assert t.step_time_s == t.collective_s
+
+    def test_scaling_invariance(self):
+        """Per-chip time terms are independent of the chip count used to
+        scale totals (totals = per-device x chips)."""
+        t1 = RooflineTerms(flops=256e12, hbm_bytes=256e9, collective_bytes=0, chips=256)
+        t2 = RooflineTerms(flops=512e12, hbm_bytes=512e9, collective_bytes=0, chips=512)
+        assert t1.compute_s == pytest.approx(t2.compute_s)
+        assert t1.memory_s == pytest.approx(t2.memory_s)

@@ -1,0 +1,41 @@
+"""Brent's method tests (paper ref [14])."""
+
+import math
+
+import pytest
+
+from repro.core.rootfind import brentq, find_rate_for_risk
+
+
+class TestBrentq:
+    def test_polynomial(self):
+        assert brentq(lambda x: x**2 - 2, 0, 2) == pytest.approx(math.sqrt(2), abs=1e-9)
+
+    def test_transcendental(self):
+        r = brentq(lambda x: math.cos(x) - x, 0, 1)
+        assert r == pytest.approx(0.7390851332151607, abs=1e-9)
+
+    def test_root_at_endpoint(self):
+        assert brentq(lambda x: x, 0.0, 1.0) == 0.0
+        assert brentq(lambda x: x - 1.0, 0.0, 1.0) == 1.0
+
+    def test_sign_check(self):
+        with pytest.raises(ValueError):
+            brentq(lambda x: x**2 + 1, -1, 1)
+
+    def test_steep_function(self):
+        r = brentq(lambda x: math.tanh(50 * (x - 0.3)), 0, 1)
+        assert r == pytest.approx(0.3, abs=1e-6)
+
+
+class TestFindRateForRisk:
+    def test_monotone_risk(self):
+        # risk(q) = q^2: q_lim for xi=0.25 is 0.5.
+        q = find_rate_for_risk(lambda q: q * q, 0.25)
+        assert q == pytest.approx(0.5, abs=1e-4)
+
+    def test_always_safe(self):
+        assert find_rate_for_risk(lambda q: 0.0, 0.01) == 1.0
+
+    def test_never_safe(self):
+        assert find_rate_for_risk(lambda q: 1.0, 0.01) == pytest.approx(1e-6)

@@ -1,0 +1,171 @@
+"""Serving tests: partition equivalence, router semantics, engine runs,
+failure handling."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.power import dynamic_policy, fixed_policy
+from repro.models import build_model, init_from_template
+from repro.serving import (
+    PipelineServer,
+    ReplicaBudget,
+    RouteError,
+    Router,
+    partition_model,
+)
+
+
+def tiny_model(name="stablelm-1.6b"):
+    cfg = dataclasses.replace(
+        get_smoke_config(name), dtype="float32", param_dtype="float32"
+    )
+    model = build_model(cfg)
+    params = init_from_template(model.template, jax.random.PRNGKey(0), "float32")
+    return cfg, model, params
+
+
+class TestPartition:
+    @pytest.mark.parametrize("name,G", [("stablelm-1.6b", 2), ("phi4-mini-3.8b", 3), ("hymba-1.5b", 2)])
+    def test_stage_split_matches_full_forward(self, name, G):
+        """Chaining stage forwards == full model forward."""
+        cfg, model, params = tiny_model(name)
+        stages = partition_model(cfg, params, G)
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)
+
+        full_logits, _ = model.forward(params, {"tokens": tokens})
+
+        x = {"tokens": tokens}
+        for g, (m_g, p_g) in enumerate(stages):
+            out, _ = m_g.forward(p_g, x)
+            x = {"hidden": out}
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(full_logits), rtol=2e-4, atol=2e-4
+        )
+
+    def test_stage_decode_matches_full(self):
+        cfg, model, params = tiny_model()
+        G = 2
+        stages = partition_model(cfg, params, G)
+        tokens = jax.random.randint(jax.random.PRNGKey(2), (1, 12), 0, cfg.vocab_size)
+
+        _, full_cache = model.prefill(params, {"tokens": tokens[:, :-1]}, 20)
+        full_logits, _ = model.decode_step(params, tokens[:, -1:], full_cache)
+
+        # stage prefill chain
+        caches = []
+        x = {"tokens": tokens[:, :-1]}
+        for m_g, p_g in stages:
+            out, c = m_g.prefill(p_g, x, 20)
+            caches.append(c)
+            x = {"hidden": out}
+        # stage decode chain
+        inp = tokens[:, -1:]
+        for g, (m_g, p_g) in enumerate(stages):
+            out, caches[g] = m_g.decode_step(p_g, inp, caches[g])
+            inp = out
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(full_logits), rtol=2e-4, atol=2e-4
+        )
+
+
+class TestRouter:
+    def _budgets(self, levels, G=1):
+        pol = dynamic_policy(100)
+        return [
+            [ReplicaBudget(policy=pol, level=l) for l in levels] for _ in range(G)
+        ]
+
+    def test_uniform_over_available(self):
+        r = Router(policy="uniform", seed=0)
+        budgets = self._budgets([50.0, 50.0, 5.0])  # third in power save
+        budgets[0][2].active = False
+        probs = r.probabilities(budgets)[0]
+        np.testing.assert_allclose(probs, [0.5, 0.5, 0.0])
+
+    def test_adaptive_downweights_critical(self):
+        r = Router(policy="adaptive", seed=0)
+        budgets = self._budgets([30.0, 80.0, 80.0])  # first is PM1 (critical)
+        probs = r.probabilities(budgets)[0]
+        assert probs[0] < probs[1]
+        assert probs[1] == pytest.approx(probs[2])
+
+    def test_route_error_when_group_empty(self):
+        r = Router(policy="uniform")
+        budgets = self._budgets([50.0, 50.0])
+        for b in budgets[0]:
+            b.fail()
+        with pytest.raises(RouteError):
+            r.route(budgets)
+
+
+class TestEngine:
+    def test_generates_tokens(self):
+        cfg, model, params = tiny_model()
+        server = PipelineServer(
+            model, params, n_groups=2, n_replicas=2, policy="adaptive",
+            harvest_bounds=(20.0, 30.0), max_len=64, seed=0,
+        )
+        stats = server.run(n_slots=40, arrival_p=0.5, prompt_len=6, n_tokens=2)
+        assert stats.tokens_generated > 0
+        assert stats.completed_jobs > 0
+        assert stats.stage_executions >= stats.tokens_generated
+
+    def test_engine_output_matches_direct_decode(self):
+        """The pipelined engine's greedy tokens == monolithic greedy."""
+        cfg, model, params = tiny_model()
+        server = PipelineServer(
+            model, params, n_groups=2, n_replicas=1,
+            harvest_bounds=(50.0, 60.0), max_len=64, seed=1,
+        )
+        prompt = np.arange(5) % cfg.vocab_size
+        req = server.submit(prompt, n_tokens=3)
+        for _ in range(100):
+            if req.done:
+                break
+            server.step()
+        assert req.done
+
+        # Direct greedy decode.
+        logits, cache = model.prefill(params, {"tokens": jnp.asarray(prompt)[None]}, 64)
+        toks = []
+        tok = int(jnp.argmax(logits[0, -1]))
+        toks.append(tok)
+        for _ in range(2):
+            logits, cache = model.decode_step(params, jnp.asarray([[tok]]), cache)
+            tok = int(jnp.argmax(logits[0, -1]))
+            toks.append(tok)
+        assert req.generated == toks
+
+    def test_failover_reroutes_and_continues(self):
+        cfg, model, params = tiny_model()
+        server = PipelineServer(
+            model, params, n_groups=2, n_replicas=2,
+            harvest_bounds=(50.0, 60.0), max_len=64, seed=2,
+        )
+        req = server.submit(np.arange(6), n_tokens=4)
+        for _ in range(3):
+            server.step()
+        g = req.stage
+        server.fail_replica(g, req.replicas[g])
+        for _ in range(200):
+            if req.done or req.dropped:
+                break
+            server.step()
+        assert req.done
+        assert server.stats.rerouted_stages >= 1
+        assert len(req.generated) == 4
+
+    def test_low_budget_causes_downtime(self):
+        cfg, model, params = tiny_model()
+        server = PipelineServer(
+            model, params, n_groups=1, n_replicas=2,
+            harvest_bounds=(1.0, 3.0), max_len=64, seed=3,
+            pm_policy=fixed_policy(3),
+        )
+        stats = server.run(n_slots=60, arrival_p=0.9, prompt_len=4, n_tokens=2)
+        assert stats.downtime_fraction > 0.0

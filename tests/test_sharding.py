@@ -1,0 +1,98 @@
+"""Sharding-rule tests: logical-axis resolution, divisibility fallback,
+param-tree shardings, rule-set sanity."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed.sharding import (
+    DECODE_RULES,
+    DEFAULT_RULES,
+    PREFILL_RULES,
+    RULE_SETS,
+    TRAIN_RULES,
+    _resolve,
+    divisible_spec,
+    logical,
+    param_shardings,
+    use_mesh_rules,
+)
+from repro.models.common import ParamSpec
+
+
+def mesh2d():
+    dev = np.array(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(dev, ("data", "model"))
+
+
+class TestResolve:
+    def test_basic_mapping(self):
+        m = mesh2d()
+        spec = _resolve(DEFAULT_RULES, m, ("batch", "seq", "heads"))
+        assert spec == P("data", None, "model")
+
+    def test_missing_axes_dropped(self):
+        """'pod' is absent from the single-pod mesh -> batch maps to data only."""
+        m = mesh2d()
+        spec = _resolve(DEFAULT_RULES, m, ("batch",))
+        assert spec == P("data")
+
+    def test_no_double_use_of_mesh_axis(self):
+        m = mesh2d()
+        # TRAIN_RULES: act_seq -> model, heads -> model; in one spec the
+        # second user of "model" must fall back to None.
+        spec = _resolve(TRAIN_RULES, m, ("act_seq", "heads"))
+        assert spec == P("model", None)
+
+    def test_divisible_spec_fallback(self):
+        m = mesh2d()
+        # 25 heads on a 1-way axis is fine; force check with fake size via
+        # a shape not divisible by the axis size 1 -> always divisible.
+        spec = divisible_spec((25, 64), ("heads", "head_dim"), m, DEFAULT_RULES)
+        assert spec == P("model", None)
+
+
+class TestLogical:
+    def test_noop_without_context(self):
+        x = jax.numpy.ones((4, 4))
+        y = logical(x, ("batch", "embed"))
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_constraint_applies_in_context(self):
+        m = mesh2d()
+        with use_mesh_rules(m, DEFAULT_RULES):
+            x = jax.numpy.ones((4, 4))
+            y = logical(x, ("batch", "embed"))
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+class TestParamShardings:
+    def test_tree_mapping(self):
+        m = mesh2d()
+        tree = {
+            "w": ParamSpec((64, 128), ("embed_fsdp", "ff")),
+            "b": ParamSpec((128,), ("ff",)),
+        }
+        sh = param_shardings(tree, m, TRAIN_RULES)
+        assert sh["w"].spec == P("data", "model")
+        assert sh["b"].spec == P("model")
+
+
+class TestRuleSets:
+    def test_all_rule_sets_resolvable(self):
+        m = mesh2d()
+        for name, rules in RULE_SETS.items():
+            for logical_name in rules:
+                spec = _resolve(rules, m, (logical_name,))
+                assert isinstance(spec, P), (name, logical_name)
+
+    def test_decode_rules_shard_cache_seq(self):
+        m = mesh2d()
+        spec = _resolve(DECODE_RULES, m, ("cache_seq",))
+        assert spec == P("model")
+
+    def test_prefill_replicates_params_across_data(self):
+        m = mesh2d()
+        spec = _resolve(PREFILL_RULES, m, ("embed_fsdp",))
+        assert spec == P(None)
