@@ -13,7 +13,12 @@ per-figure arrival parameters. We use:
 
 from __future__ import annotations
 
+import dataclasses
 import time
+
+import numpy as np
+
+from repro.core.simulator import SimConfig, scenario_from_config, scenario_params
 
 
 def timed(fn, *args, repeat: int = 3, **kw):
@@ -35,3 +40,57 @@ FIG2A_ARRIVALS = (7, 13)
 FIG2B_ARRIVALS = (6, 10)
 FIG34_MEANS = (6.0, 8.0, 10.0)
 XI_LIM = 0.01
+
+# Fig. 2 power-mode strategies: name -> (pm_thresholds, pm_allowed).
+PM_STRATEGIES = {
+    "15W": ((), (1,)),
+    "30W": ((), (2,)),
+    "60W": ((), (3,)),
+    "dynamic": ((40.0, 60.0), (1, 2, 3)),
+}
+
+# Shared Monte-Carlo scale for the Fig. 3/4 network sweeps.
+FIG34_STEPS = 300
+FIG34_RUNS = 200
+
+
+def lower_strategies(n_steps: int, p_arrival: float, lo: int, hi: int):
+    """All PM strategies as one stackable single-device scenario list
+    (fixed-mode tables padded to the dynamic table's length)."""
+    n_thr = max(len(thr) for thr, _ in PM_STRATEGIES.values())
+    return [
+        scenario_from_config(
+            SimConfig(
+                n_groups=1,
+                n_per_group=1,
+                n_steps=n_steps,
+                p_arrival=p_arrival,
+                pm_thresholds=thr,
+                pm_allowed=allowed,
+            ),
+            np.array([[lo]]),
+            np.array([[hi]]),
+            n_thresholds=n_thr,
+        )
+        for thr, allowed in PM_STRATEGIES.values()
+    ]
+
+
+def sweep_grid(points, policies, base: SimConfig):
+    """Cross sweep points with policies -> (labels, ScenarioParams list).
+
+    ``points`` is ``[(label, topology, rates, config_overrides)]``; each
+    point expands to one scenario per policy, labelled ``{label}/{policy}``.
+    """
+    labels, scenarios = [], []
+    for label, topo, rates, overrides in points:
+        for pol in policies:
+            labels.append(f"{label}/{pol}")
+            scenarios.append(
+                scenario_params(
+                    topo,
+                    dataclasses.replace(base, policy=pol, **overrides),
+                    long_term_rates=rates,
+                )
+            )
+    return labels, scenarios

@@ -1,6 +1,11 @@
 """Serving-engine benchmark: the paper's scheduler driving real decode
 compute on a tiny model — tokens/s and downtime per policy, plus a
-failover run (tokens keep flowing after a replica dies)."""
+failover run (tokens keep flowing after a replica dies).
+
+Before the heavy real-compute runs, the abstract network simulator
+predicts each policy's downtime for the same fleet shape via one
+``simulate_sweep`` call (one jit compile for every candidate policy) —
+the sweep engine doubles as the serving fleet's capacity planner."""
 
 from __future__ import annotations
 
@@ -10,6 +15,8 @@ import jax
 import numpy as np
 
 from repro.configs import get_smoke_config
+from repro.core.network import paper_topology
+from repro.core.simulator import SimConfig, simulate_sweep
 from repro.models import build_model, init_from_template
 from repro.serving import PipelineServer
 
@@ -34,9 +41,30 @@ def _server(policy: str, seed: int = 0, harvest=(6.0, 10.0)):
     )
 
 
+def _planned_downtime(
+    policies: tuple[str, ...], harvest=(6.0, 10.0), arrival_p: float = 0.5
+) -> dict[str, float]:
+    """Abstract-model downtime forecast for the server's (G=3, R=3) fleet:
+    one vmapped sweep over the candidate policies, one compile."""
+    mean = (harvest[0] + harvest[1]) / 2
+    topo = paper_topology(
+        n_groups=3, n_per_group=3, arrival_means=(mean,) * 3, half_width=2
+    )
+    cfgs = [
+        SimConfig(
+            n_groups=3, n_per_group=3, n_steps=60, p_arrival=arrival_p, policy=p
+        )
+        for p in policies
+    ]
+    res = simulate_sweep(topo, cfgs, n_runs=64)
+    return {p: float(res.downtime_fraction[i].mean()) for i, p in enumerate(policies)}
+
+
 def run() -> list[str]:
     rows = []
-    for policy in ("uniform", "adaptive"):
+    policies = ("uniform", "adaptive")
+    plan = _planned_downtime(policies)
+    for policy in policies:
         server = _server(policy)
         stats, dt = timed(
             server.run, 60, arrival_p=0.5, prompt_len=6, n_tokens=2, repeat=1
@@ -46,7 +74,8 @@ def run() -> list[str]:
                 f"serve/{policy}",
                 dt * 1e6 / max(stats.tokens_generated, 1),
                 f"tokens={stats.tokens_generated} jobs={stats.completed_jobs} "
-                f"dropped={stats.dropped_jobs} downtime={stats.downtime_fraction:.3f}",
+                f"dropped={stats.dropped_jobs} downtime={stats.downtime_fraction:.3f} "
+                f"planned_downtime={plan[policy]:.3f}",
             )
         )
     # Failover: kill a replica mid-run; throughput must continue.

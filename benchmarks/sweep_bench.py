@@ -1,0 +1,118 @@
+"""Sweep-engine benchmark: per-scenario re-jitting vs one vmapped sweep.
+
+Runs the Fig. 3 grid (6 settings x 3 policies on the 3x3 network) both
+ways and writes wall-clock + compile counts to ``BENCH_sweep.json``:
+
+* **per_point** emulates the pre-sweep code path: a *fresh* ``jax.jit``
+  wrapper per scenario (exactly what the old ``build_runner(config)``
+  did, since each config produced a new jitted closure), so every grid
+  point pays trace + XLA compile.
+* **sweep** is one ``simulate_sweep`` call: the whole grid is a single
+  compiled executable (vmap over the scenario axis x Monte-Carlo axis).
+
+Both paths share Monte-Carlo keys, so their downtime numbers must agree
+bit-for-bit; the benchmark asserts that before recording timings.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+import numpy as np
+
+from repro.core import simulator
+from repro.core.simulator import _make_run, simulate_sweep
+
+from .common import FIG34_RUNS as N_RUNS
+from .common import FIG34_STEPS as N_STEPS
+from .common import csv_row
+
+
+def _fig3_grid():
+    from .fig3 import grid
+
+    return grid()
+
+
+def _per_point(scenarios, keys):
+    """Old-style path: one fresh jit (compile) per grid point."""
+    out = []
+    for params in scenarios:
+        G, N = params.network_shape
+        run = jax.jit(jax.vmap(_make_run(G, N, N_STEPS, 2 * N), in_axes=(None, 0)))
+        out.append(jax.tree_util.tree_map(np.asarray, run(params, keys)))
+    return out
+
+
+def run(write_json: bool = True) -> list[str]:
+    labels, scenarios = _fig3_grid()
+    keys = jax.random.split(jax.random.PRNGKey(0), N_RUNS)
+
+    simulator.reset_trace_counts()
+    t0 = time.perf_counter()
+    before_out = _per_point(scenarios, keys)
+    before_s = time.perf_counter() - t0
+    before_compiles = sum(simulator.trace_counts().values())
+
+    # Drop the sweep engine's shape cache so "after" pays its (single)
+    # compile inside the timed region — a cold-start comparison.
+    simulator._sweep_runner.cache_clear()
+    simulator.reset_trace_counts()
+    t0 = time.perf_counter()
+    after = simulate_sweep(None, scenarios, n_runs=N_RUNS, n_steps=N_STEPS, seed=0)
+    after_s = time.perf_counter() - t0
+    after_compiles = sum(simulator.trace_counts().values())
+
+    down_before = np.array([o["downtime_fraction"].mean() for o in before_out])
+    down_after = after.downtime_fraction.mean(axis=1)
+    if not np.array_equal(
+        np.stack([o["downtime_fraction"] for o in before_out]),
+        after.downtime_fraction,
+    ):
+        raise AssertionError("sweep result diverged from per-point path")
+
+    record = {
+        "grid": "fig3 (6 settings x 3 policies, 3x3 network)",
+        "n_scenarios": len(scenarios),
+        "n_runs": N_RUNS,
+        "n_steps": N_STEPS,
+        "before": {
+            "path": "per-scenario fresh jit (old build_runner behavior)",
+            "wall_s": round(before_s, 3),
+            "compiles": before_compiles,
+        },
+        "after": {
+            "path": "single vmapped simulate_sweep",
+            "wall_s": round(after_s, 3),
+            "compiles": after_compiles,
+        },
+        "speedup": round(before_s / after_s, 2),
+        "bitwise_equal": True,
+        "downtime_range": [float(down_after.min()), float(down_after.max())],
+        "max_abs_diff": float(np.abs(down_before - down_after).max()),
+    }
+    if write_json:
+        out = pathlib.Path(__file__).resolve().parent.parent / "BENCH_sweep.json"
+        out.write_text(json.dumps(record, indent=2) + "\n")
+
+    return [
+        csv_row(
+            "sweep/fig3_grid",
+            after_s * 1e6 / len(scenarios),
+            f"before={before_s:.1f}s/{before_compiles}x-compile "
+            f"after={after_s:.1f}s/{after_compiles}x-compile "
+            f"speedup={record['speedup']}x bitwise_equal=True",
+        )
+    ]
+
+
+def main() -> None:
+    for row in run():
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

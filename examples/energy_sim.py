@@ -2,9 +2,12 @@
 
 Run: PYTHONPATH=src python examples/energy_sim.py
 (Full Monte-Carlo counts live in benchmarks/; this uses smaller runs.)
+
+Each figure's whole parameter grid runs as ONE ``simulate_sweep`` call —
+a single jit compile per network shape, however many scenarios.
 """
 
-import dataclasses
+import numpy as np
 
 from repro.core import (
     DeviceModel,
@@ -13,24 +16,32 @@ from repro.core import (
     fixed_policy,
     paper_topology,
     q_lim,
-    simulate,
-    simulate_single_device,
+    scenario_from_config,
+    simulate_sweep,
     uniform_mdf,
 )
 
-print("=== Fig 2a: power modes on one device (100 slots) ===")
-base = SimConfig(n_groups=1, n_per_group=1, n_steps=100, p_arrival=0.62)
-for name, thr, allowed in (
+print("=== Fig 2a: power modes on one device (100 slots, one sweep) ===")
+strategies = (
     ("15W", (), (1,)),
     ("30W", (), (2,)),
     ("60W", (), (3,)),
     ("dynamic", (40.0, 60.0), (1, 2, 3)),
-):
-    cfg = dataclasses.replace(base, pm_thresholds=thr, pm_allowed=allowed)
-    res = simulate_single_device(cfg, 7, 13, n_runs=100)
-    print(f"  {name:8s} jobs={res.completed.mean():5.1f} "
-          f"battery={res.mean_battery.mean():5.1f}% "
-          f"downtime={res.downtime_fraction.mean():.3f}")
+)
+scenarios = [
+    scenario_from_config(
+        SimConfig(n_groups=1, n_per_group=1, n_steps=100, p_arrival=0.62,
+                  pm_thresholds=thr, pm_allowed=allowed),
+        np.array([[7]]), np.array([[13]]),
+        n_thresholds=max(len(t) for _, t, _ in strategies),
+    )
+    for _, thr, allowed in strategies
+]
+res = simulate_sweep(None, scenarios, n_runs=100, n_steps=100)
+for i, (name, _, _) in enumerate(strategies):
+    print(f"  {name:8s} jobs={res.completed[i].mean():5.1f} "
+          f"battery={res.mean_battery[i].mean():5.1f}% "
+          f"downtime={res.downtime_fraction[i].mean():.3f}")
 
 print("=== Fig 2b: q_lim under xi_lim=0.01 (Brent on Eq. 3) ===")
 for name, pol in (("15W", fixed_policy(1)), ("30W", fixed_policy(2)),
@@ -39,13 +50,16 @@ for name, pol in (("15W", fixed_policy(1)), ("30W", fixed_policy(2)),
     lims = q_lim(dev, 0.01)
     print(f"  {name:8s} q_lim={lims.q_lim:.3f} binding={lims.binding}")
 
-print("=== Fig 3/4: scheduling policies on the 3x3 network ===")
+print("=== Fig 3/4: scheduling policies on the 3x3 network (one sweep) ===")
 topo = paper_topology(arrival_means=(3.0, 5.0, 7.0))
-for policy in ("uniform", "long_term", "adaptive"):
-    cfg = SimConfig(n_groups=3, n_per_group=3, n_steps=200, p_arrival=0.7,
-                    policy=policy)
-    res = simulate(topo, cfg, n_runs=50)
-    s = res.summary()
+policies = ("uniform", "long_term", "adaptive")
+cfgs = [
+    SimConfig(n_groups=3, n_per_group=3, n_steps=200, p_arrival=0.7, policy=p)
+    for p in policies
+]
+res = simulate_sweep(topo, cfgs, n_runs=50)
+for i, policy in enumerate(policies):
+    s = res[i].summary()
     print(f"  {policy:9s} downtime={s['downtime_fraction']:.4f} "
           f"throughput={s['normalized_throughput']:.3f} "
           f"dropped={s['dropped']:.1f}")

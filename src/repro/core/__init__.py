@@ -13,7 +13,14 @@ Layers:
 
 from .energy import DiscreteMDF, battery_update, convolve_mdf, uniform_mdf
 from .network import DeviceSpec, NetworkTopology, paper_topology
-from .policies import POLICIES, adaptive_probs, long_term_probs, uniform_probs
+from .policies import (
+    POLICIES,
+    POLICY_IDS,
+    POLICY_LIST,
+    adaptive_probs,
+    long_term_probs,
+    uniform_probs,
+)
 from .power import (
     ORIN_POWER_MODES,
     POWER_SAVE,
@@ -25,7 +32,19 @@ from .power import (
 from .rates import RateLimits, q_lim, q_lim_energy, risk_curve
 from .rootfind import brentq, find_rate_for_risk
 from .semi_markov import DeviceModel, SemiMarkovChain, state_index, state_tuple
-from .simulator import SimConfig, SimResult, build_runner, simulate, simulate_single_device
+from .simulator import (
+    ScenarioParams,
+    SimConfig,
+    SimResult,
+    SweepResult,
+    build_runner,
+    scenario_from_config,
+    scenario_params,
+    simulate,
+    simulate_single_device,
+    simulate_sweep,
+    stack_scenarios,
+)
 
 __all__ = [
     "DiscreteMDF",
@@ -36,6 +55,8 @@ __all__ = [
     "NetworkTopology",
     "paper_topology",
     "POLICIES",
+    "POLICY_IDS",
+    "POLICY_LIST",
     "adaptive_probs",
     "long_term_probs",
     "uniform_probs",
@@ -55,9 +76,15 @@ __all__ = [
     "SemiMarkovChain",
     "state_index",
     "state_tuple",
+    "ScenarioParams",
     "SimConfig",
     "SimResult",
+    "SweepResult",
     "build_runner",
+    "scenario_from_config",
+    "scenario_params",
     "simulate",
     "simulate_single_device",
+    "simulate_sweep",
+    "stack_scenarios",
 ]

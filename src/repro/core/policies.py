@@ -16,7 +16,14 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-__all__ = ["uniform_probs", "long_term_probs", "adaptive_probs", "POLICIES"]
+__all__ = [
+    "uniform_probs",
+    "long_term_probs",
+    "adaptive_probs",
+    "POLICIES",
+    "POLICY_LIST",
+    "POLICY_IDS",
+]
 
 _EPS = 1e-12
 
@@ -66,3 +73,10 @@ POLICIES = {
     "long_term": long_term_probs,
     "adaptive": adaptive_probs,
 }
+
+# Signature-uniform ordering for traced dispatch: the simulator selects a
+# policy at runtime via ``jax.lax.switch(policy_id, ...)`` over this tuple,
+# so a sweep can mix policies inside one compiled executable. All three
+# share the positional signature ``(q_lims, pm, available) -> probs``.
+POLICY_LIST = (uniform_probs, long_term_probs, adaptive_probs)
+POLICY_IDS = {name: POLICY_LIST.index(fn) for name, fn in POLICIES.items()}

@@ -21,28 +21,69 @@ Semantics (faithful to the paper's model):
   (processing pauses, designations rejected) until it recovers above
   ``E'_th``.
 
+Sweep architecture
+------------------
+
+Every scenario knob — job-arrival probability, battery thresholds,
+per-device power-mode tables, harvest bounds, scheduling policy — lives
+in a :class:`ScenarioParams` pytree of **traced runtime inputs**. The
+compiled step function closes only over the network *shape*
+``(G, N, n_steps, n_jobs)``, so an entire figure's parameter grid is one
+``vmap`` over a leading scenario axis (times the Monte-Carlo axis) and
+costs exactly one ``jax.jit`` compile per shape. The scheduling policy is
+selected *inside* the trace via ``jax.lax.switch`` over
+:data:`repro.core.policies.POLICY_LIST`.
+
+Because PM/harvest tables are per-device (``[G, N, ...]``), heterogeneous
+fleets (e.g. one group of 60 W devices feeding a group of 15 W devices)
+are expressible directly — build :class:`ScenarioParams` by hand or via
+:func:`scenario_from_config` and edit the arrays.
+
 The whole network steps inside one ``lax.scan``; Monte-Carlo repetitions
-(the paper uses 1000) are ``vmap``-ed over seeds.
+(the paper uses 1000) are ``vmap``-ed over seeds; scenario grids are
+``vmap``-ed over the params pytree.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+import functools
+from collections import Counter
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .network import NetworkTopology
-from .policies import POLICIES
+from .policies import POLICIES, POLICY_IDS, POLICY_LIST
 
-__all__ = ["SimConfig", "SimResult", "build_runner", "simulate", "simulate_single_device"]
+__all__ = [
+    "ScenarioParams",
+    "SimConfig",
+    "SimResult",
+    "SweepResult",
+    "build_runner",
+    "reset_trace_counts",
+    "scenario_from_config",
+    "scenario_params",
+    "simulate",
+    "simulate_single_device",
+    "simulate_sweep",
+    "stack_scenarios",
+    "trace_counts",
+]
 
 
 @dataclasses.dataclass(frozen=True)
 class SimConfig:
-    """Static simulation parameters (hashable -> one jit per config)."""
+    """Declarative description of one simulation scenario.
+
+    Since the sweep refactor this is a plain description — none of its
+    fields are baked into the compiled program except the shape
+    ``(n_groups, n_per_group, n_steps)``; everything else becomes traced
+    runtime input via :func:`scenario_from_config`.
+    """
 
     n_groups: int
     n_per_group: int
@@ -66,6 +107,140 @@ class SimConfig:
             raise ValueError(f"unknown policy {self.policy!r}")
         if len(self.pm_allowed) != len(self.pm_thresholds) + 1:
             raise ValueError("need len(pm_allowed) == len(pm_thresholds) + 1")
+        if not (0 <= self.e_th < self.e_th_hi <= self.e_max):
+            raise ValueError("need 0 <= e_th < e_th_hi <= e_max (hysteresis)")
+        if self.e_init is not None and not (0 <= self.e_init <= self.e_max):
+            raise ValueError("need 0 <= e_init <= e_max")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ScenarioParams:
+    """One scenario's runtime inputs — a pytree of arrays, all traced.
+
+    Tables are **per device** (leading ``[G, N]`` axes), so devices may
+    be heterogeneous in battery size, hysteresis thresholds, power-mode
+    tables and harvest bounds. Stack several scenarios along a new
+    leading axis (:func:`stack_scenarios`) to form a sweep grid.
+    """
+
+    p_arrival: jax.Array  # [] f32, Bernoulli job-arrival probability
+    e_max: jax.Array  # [G, N] f32 battery capacity
+    e_th: jax.Array  # [G, N] f32 power-save entry threshold
+    e_th_hi: jax.Array  # [G, N] f32 power-save exit threshold
+    e_init: jax.Array  # [G, N] f32 initial battery
+    kappa: jax.Array  # [G, N, P] f32 slots per stage by PM
+    ce: jax.Array  # [G, N, P] f32 energy per stage by PM
+    pm_thresholds: jax.Array  # [G, N, T] f32 (+inf padded)
+    pm_allowed: jax.Array  # [G, N, T+1] i32
+    arrival_lo: jax.Array  # [G, N] i32 harvest lower bound
+    arrival_hi: jax.Array  # [G, N] i32 harvest upper bound
+    rates: jax.Array  # [G, N] f32 long-term rates (Eq. 6 numerators)
+    policy_id: jax.Array  # [] i32 index into POLICY_LIST
+
+    @property
+    def grid_shape(self) -> tuple[int, ...]:
+        """Leading scenario axes, if any (empty for a single scenario)."""
+        return self.arrival_lo.shape[:-2]
+
+    @property
+    def network_shape(self) -> tuple[int, int]:
+        return self.arrival_lo.shape[-2:]
+
+
+def _per_device(x, G: int, N: int, *, dtype) -> jnp.ndarray:
+    """Broadcast a scalar / table to per-device ``[G, N, ...]`` layout."""
+    arr = jnp.asarray(x, dtype=dtype)
+    if arr.ndim <= 1:  # scalar or shared table -> tile over devices
+        return jnp.broadcast_to(arr, (G, N) + arr.shape)
+    return arr.reshape((G, N) + arr.shape[2:])
+
+
+def scenario_from_config(
+    config: SimConfig,
+    arrival_lo: np.ndarray,
+    arrival_hi: np.ndarray,
+    long_term_rates: np.ndarray | None = None,
+    *,
+    n_thresholds: int | None = None,
+) -> ScenarioParams:
+    """Lower a :class:`SimConfig` to its traced :class:`ScenarioParams`.
+
+    ``n_thresholds`` pads the PM-threshold table to a common length so
+    scenarios with different dynamic-mode tables (e.g. fixed 30 W vs the
+    3-mode dynamic policy) can be stacked into one sweep grid: thresholds
+    are padded with ``+inf`` and ``pm_allowed`` by repeating its last
+    entry, which leaves the lookup unchanged.
+    """
+    G, N = config.n_groups, config.n_per_group
+    thr = list(config.pm_thresholds)
+    allowed = list(config.pm_allowed)
+    if n_thresholds is not None:
+        if n_thresholds < len(thr):
+            raise ValueError(f"n_thresholds={n_thresholds} < {len(thr)} in config")
+        pad = n_thresholds - len(thr)
+        thr = thr + [np.inf] * pad
+        allowed = allowed + [allowed[-1]] * pad
+    if long_term_rates is None:
+        long_term_rates = np.ones((G, N))
+    e_init = config.e_max if config.e_init is None else config.e_init
+    f32, i32 = jnp.float32, jnp.int32
+    return ScenarioParams(
+        p_arrival=jnp.asarray(config.p_arrival, f32),
+        e_max=_per_device(config.e_max, G, N, dtype=f32),
+        e_th=_per_device(config.e_th, G, N, dtype=f32),
+        e_th_hi=_per_device(config.e_th_hi, G, N, dtype=f32),
+        e_init=_per_device(e_init, G, N, dtype=f32),
+        kappa=_per_device(config.kappa_table, G, N, dtype=f32),
+        ce=_per_device(config.ce_table, G, N, dtype=f32),
+        pm_thresholds=_per_device(thr, G, N, dtype=f32),
+        pm_allowed=_per_device(allowed, G, N, dtype=i32),
+        arrival_lo=jnp.asarray(arrival_lo, i32).reshape(G, N),
+        arrival_hi=jnp.asarray(arrival_hi, i32).reshape(G, N),
+        rates=jnp.asarray(long_term_rates, f32).reshape(G, N),
+        policy_id=jnp.asarray(POLICY_IDS[config.policy], i32),
+    )
+
+
+def scenario_params(
+    topology: NetworkTopology,
+    config: SimConfig,
+    *,
+    long_term_rates: np.ndarray | None = None,
+    xi_lim: float = 0.01,
+    n_thresholds: int | None = None,
+) -> ScenarioParams:
+    """Build :class:`ScenarioParams` for ``config`` on ``topology``.
+
+    Computes the semi-Markov long-term rates (Eq. 6) when the policy
+    needs them and none are supplied.
+    """
+    if config.n_groups != topology.n_groups or config.n_per_group != topology.n_per_group:
+        raise ValueError("config/topology shape mismatch")
+    lo, hi = topology.arrival_bounds()
+    if long_term_rates is None and config.policy in ("long_term", "adaptive"):
+        long_term_rates = topology.long_term_rates(xi_lim)
+    return scenario_from_config(
+        config, lo, hi, long_term_rates, n_thresholds=n_thresholds
+    )
+
+
+def stack_scenarios(scenarios: Sequence[ScenarioParams]) -> ScenarioParams:
+    """Stack scenarios along a new leading sweep axis.
+
+    All scenarios must share the network shape and table lengths — pad
+    heterogeneous PM tables via ``n_thresholds`` in
+    :func:`scenario_from_config`.
+    """
+    if not scenarios:
+        raise ValueError("need at least one scenario")
+    shapes = {s.pm_thresholds.shape for s in scenarios}
+    if len(shapes) != 1:
+        raise ValueError(
+            f"scenario table shapes differ ({sorted(shapes)}); pad with "
+            "n_thresholds= so all scenarios share one threshold length"
+        )
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *scenarios)
 
 
 @dataclasses.dataclass
@@ -96,123 +271,172 @@ class SimResult:
         }
 
 
-def build_runner(
-    config: SimConfig,
-    arrival_lo: np.ndarray,
-    arrival_hi: np.ndarray,
-    long_term_rates: np.ndarray | None = None,
-):
-    """Build a jitted ``run(key) -> metrics dict`` for one network."""
-    G, N = config.n_groups, config.n_per_group
-    n_jobs = 2 * N  # <= N queued + N processing per group (see module doc)
+@dataclasses.dataclass
+class SweepResult:
+    """Sweep metrics with leading axes ``[n_scenarios, n_runs]``.
 
-    kappa = jnp.asarray(config.kappa_table, dtype=jnp.float32)
-    ce = jnp.asarray(config.ce_table, dtype=jnp.float32)
-    thr = jnp.asarray(config.pm_thresholds, dtype=jnp.float32)
-    allowed = jnp.asarray(config.pm_allowed, dtype=jnp.int32)
-    lo = jnp.asarray(arrival_lo, dtype=jnp.int32).reshape(G, N)
-    hi = jnp.asarray(arrival_hi, dtype=jnp.int32).reshape(G, N)
-    if long_term_rates is None:
-        long_term_rates = np.ones((G, N))
-    rates = jnp.asarray(long_term_rates, dtype=jnp.float32).reshape(G, N)
-    policy_fn = POLICIES[config.policy]
-    e_init = config.e_max if config.e_init is None else config.e_init
+    Index with ``result[i]`` to get scenario ``i``'s :class:`SimResult`.
+    """
 
-    def pm_of(e):
-        """Active PM index from battery level (paper's lookup table)."""
-        idx = jnp.searchsorted(thr, e, side="right") if thr.size else jnp.zeros_like(
-            jnp.asarray(e, dtype=jnp.int32)
+    completed: np.ndarray
+    dropped: np.ndarray
+    arrivals: np.ndarray
+    downtime_fraction: np.ndarray
+    mean_battery: np.ndarray
+
+    def __len__(self) -> int:
+        return self.completed.shape[0]
+
+    def __getitem__(self, i: int) -> SimResult:
+        return SimResult(
+            completed=self.completed[i],
+            dropped=self.dropped[i],
+            arrivals=self.arrivals[i],
+            downtime_fraction=self.downtime_fraction[i],
+            mean_battery=self.mean_battery[i],
         )
-        return allowed[idx]
 
-    def step(carry, key):
-        (E, gamma, queued, j_act, j_proc, j_stage, j_dev, j_rem, j_pm, ctr) = carry
-        completed, dropped, arrivals, ps_sum, batt_sum = ctr
-        k_inc, k_arr, k_pick = jax.random.split(key, 3)
+    @property
+    def normalized_throughput(self) -> np.ndarray:
+        return self.completed / np.maximum(self.arrivals, 1)
 
-        # 1) harvest energy
-        inc = jax.random.randint(k_inc, (G, N), lo, hi + 1).astype(jnp.float32)
 
-        # 2) progress processing jobs (paused while the device power-saves)
-        stage_c = jnp.clip(j_stage, 0, G - 1)
-        d_cur = jnp.take_along_axis(j_dev, stage_c[:, None], axis=1)[:, 0]
-        dev_active = gamma[stage_c, d_cur]
-        running = j_act & j_proc & dev_active
-        cons_j = jnp.where(running, ce[j_pm] / kappa[j_pm], 0.0)
-        cons = jnp.zeros((G, N), jnp.float32).at[stage_c, d_cur].add(cons_j)
-        j_rem = j_rem - running.astype(j_rem.dtype)
+# --- compile accounting ---------------------------------------------------
+# Incremented inside the traced step builder, so it counts actual jit cache
+# misses (= XLA compiles) per network shape. Used by the compile-count
+# regression test and BENCH_sweep.json.
+_TRACE_COUNTS: Counter = Counter()
 
-        # 3) completions
-        done = j_act & j_proc & (j_rem <= 0.0)
-        j_proc = j_proc & ~done
-        j_stage = j_stage + done.astype(jnp.int32)
-        finished = done & (j_stage >= G)
-        completed = completed + jnp.sum(finished).astype(jnp.int32)
-        j_act = j_act & ~finished
 
-        # 4) battery + hysteresis (Eq. (1) totals per stage; per-slot spread)
-        E = jnp.clip(E + inc - cons, 0.0, config.e_max)
-        gamma = jnp.where(E < config.e_th, False, jnp.where(E > config.e_th_hi, True, gamma))
+def trace_counts() -> dict[tuple, int]:
+    """jit trace (cache-miss) count per ``(G, N, n_steps, n_jobs)``."""
+    return dict(_TRACE_COUNTS)
 
-        # 5) stage starts for waiting jobs
-        busy = jnp.zeros((G, N), jnp.int32).at[
-            jnp.clip(j_stage, 0, G - 1),
-            jnp.take_along_axis(j_dev, jnp.clip(j_stage, 0, G - 1)[:, None], axis=1)[:, 0],
-        ].add((j_act & j_proc).astype(jnp.int32)) > 0
-        stage_w = jnp.clip(j_stage, 0, G - 1)
-        d_wait = jnp.take_along_axis(j_dev, stage_w[:, None], axis=1)[:, 0]
-        pm_try = pm_of(E[stage_w, d_wait])
-        # Energy gate (paper: CE(PM) <= E): a stage starts only once the
-        # battery covers its full cost.
-        gate_ok = E[stage_w, d_wait] >= ce[pm_try]
-        can_start = (
-            j_act & ~j_proc & gamma[stage_w, d_wait] & ~busy[stage_w, d_wait] & gate_ok
-        )
-        # Tie-break: at most one waiting job per device by construction
-        # (queue capacity 1); see tests/test_simulator.py invariants.
-        pm_new = pm_try
-        j_pm = jnp.where(can_start, pm_new, j_pm)
-        j_rem = jnp.where(can_start, kappa[pm_new], j_rem)
-        j_proc = j_proc | can_start
-        started = jnp.zeros((G, N), jnp.int32).at[stage_w, d_wait].add(
-            can_start.astype(jnp.int32)
-        ) > 0
-        queued = queued & ~started
 
-        # 6) new arrival + designation (Alg. 1)
-        arrive = jax.random.bernoulli(k_arr, config.p_arrival)
-        arrivals = arrivals + arrive.astype(jnp.int32)
-        avail = gamma & ~queued
-        all_ok = jnp.all(jnp.any(avail, axis=1))
-        slot = jnp.argmin(j_act)  # first free job slot
-        has_slot = ~j_act[slot]
-        accept = arrive & all_ok & has_slot
-        dropped = dropped + (arrive & ~(all_ok & has_slot)).astype(jnp.int32)
+def reset_trace_counts() -> None:
+    _TRACE_COUNTS.clear()
 
-        pm_now = pm_of(E)
-        probs = jax.vmap(policy_fn)(rates, pm_now, avail)  # [G, N]
-        logits = jnp.where(probs > 0, jnp.log(jnp.maximum(probs, 1e-12)), -1e9)
-        pick_keys = jax.random.split(k_pick, G)
-        choice = jax.vmap(jax.random.categorical)(pick_keys, logits)  # [G]
 
-        designate = jnp.zeros((G, N), bool).at[jnp.arange(G), choice].set(True)
-        queued = queued | (designate & accept)
-        j_act = j_act.at[slot].set(jnp.where(accept, True, j_act[slot]))
-        j_proc = j_proc.at[slot].set(jnp.where(accept, False, j_proc[slot]))
-        j_stage = j_stage.at[slot].set(jnp.where(accept, 0, j_stage[slot]))
-        j_dev = j_dev.at[slot].set(jnp.where(accept, choice, j_dev[slot]))
-        j_rem = j_rem.at[slot].set(jnp.where(accept, 0.0, j_rem[slot]))
+def _make_run(G: int, N: int, n_steps: int, n_jobs: int):
+    """The un-jitted single-scenario, single-run step program.
 
-        # 7) telemetry
-        ps_sum = ps_sum + jnp.sum(~gamma).astype(jnp.int32)
-        batt_sum = batt_sum + jnp.mean(E)
+    Closes over the network shape only; every scenario parameter arrives
+    through the traced ``params`` pytree.
+    """
 
-        ctr = (completed, dropped, arrivals, ps_sum, batt_sum)
-        return (E, gamma, queued, j_act, j_proc, j_stage, j_dev, j_rem, j_pm, ctr), None
+    def run(params: ScenarioParams, key):
+        _TRACE_COUNTS[(G, N, n_steps, n_jobs)] += 1  # trace-time only
+        kappa, ce = params.kappa, params.ce  # [G, N, P]
+        thr, allowed = params.pm_thresholds, params.pm_allowed
 
-    def run(key):
+        def pm_of_grid(E):
+            """Active PM per device from battery level (paper's lookup)."""
+            idx = jnp.sum(thr <= E[..., None], axis=-1)  # searchsorted right
+            return jnp.take_along_axis(allowed, idx[..., None], axis=-1)[..., 0]
+
+        def policy_probs(policy_id, rates, pm_now, avail):
+            branches = tuple(
+                (lambda r, p, a, f=f: jax.vmap(f)(r, p, a)) for f in POLICY_LIST
+            )
+            return jax.lax.switch(policy_id, branches, rates, pm_now, avail)
+
+        def step(carry, key):
+            (E, gamma, queued, j_act, j_proc, j_stage, j_dev, j_rem, j_pm, ctr) = carry
+            completed, dropped, arrivals, ps_sum, batt_sum = ctr
+            k_inc, k_arr, k_pick = jax.random.split(key, 3)
+
+            # 1) harvest energy
+            inc = jax.random.randint(
+                k_inc, (G, N), params.arrival_lo, params.arrival_hi + 1
+            ).astype(jnp.float32)
+
+            # 2) progress processing jobs (paused while the device power-saves)
+            stage_c = jnp.clip(j_stage, 0, G - 1)
+            d_cur = jnp.take_along_axis(j_dev, stage_c[:, None], axis=1)[:, 0]
+            dev_active = gamma[stage_c, d_cur]
+            running = j_act & j_proc & dev_active
+            cons_j = jnp.where(
+                running,
+                ce[stage_c, d_cur, j_pm] / kappa[stage_c, d_cur, j_pm],
+                0.0,
+            )
+            cons = jnp.zeros((G, N), jnp.float32).at[stage_c, d_cur].add(cons_j)
+            j_rem = j_rem - running.astype(j_rem.dtype)
+
+            # 3) completions
+            done = j_act & j_proc & (j_rem <= 0.0)
+            j_proc = j_proc & ~done
+            j_stage = j_stage + done.astype(jnp.int32)
+            finished = done & (j_stage >= G)
+            completed = completed + jnp.sum(finished).astype(jnp.int32)
+            j_act = j_act & ~finished
+
+            # 4) battery + hysteresis (Eq. (1) totals per stage; per-slot spread)
+            E = jnp.clip(E + inc - cons, 0.0, params.e_max)
+            gamma = jnp.where(
+                E < params.e_th, False, jnp.where(E > params.e_th_hi, True, gamma)
+            )
+
+            # 5) stage starts for waiting jobs
+            busy = jnp.zeros((G, N), jnp.int32).at[
+                jnp.clip(j_stage, 0, G - 1),
+                jnp.take_along_axis(
+                    j_dev, jnp.clip(j_stage, 0, G - 1)[:, None], axis=1
+                )[:, 0],
+            ].add((j_act & j_proc).astype(jnp.int32)) > 0
+            stage_w = jnp.clip(j_stage, 0, G - 1)
+            d_wait = jnp.take_along_axis(j_dev, stage_w[:, None], axis=1)[:, 0]
+            pm_grid = pm_of_grid(E)
+            pm_try = pm_grid[stage_w, d_wait]
+            # Energy gate (paper: CE(PM) <= E): a stage starts only once the
+            # battery covers its full cost.
+            gate_ok = E[stage_w, d_wait] >= ce[stage_w, d_wait, pm_try]
+            can_start = (
+                j_act & ~j_proc & gamma[stage_w, d_wait] & ~busy[stage_w, d_wait] & gate_ok
+            )
+            # Tie-break: at most one waiting job per device by construction
+            # (queue capacity 1); see tests/test_simulator.py invariants.
+            pm_new = pm_try
+            j_pm = jnp.where(can_start, pm_new, j_pm)
+            j_rem = jnp.where(can_start, kappa[stage_w, d_wait, pm_new], j_rem)
+            j_proc = j_proc | can_start
+            started = jnp.zeros((G, N), jnp.int32).at[stage_w, d_wait].add(
+                can_start.astype(jnp.int32)
+            ) > 0
+            queued = queued & ~started
+
+            # 6) new arrival + designation (Alg. 1)
+            arrive = jax.random.bernoulli(k_arr, params.p_arrival)
+            arrivals = arrivals + arrive.astype(jnp.int32)
+            avail = gamma & ~queued
+            all_ok = jnp.all(jnp.any(avail, axis=1))
+            slot = jnp.argmin(j_act)  # first free job slot
+            has_slot = ~j_act[slot]
+            accept = arrive & all_ok & has_slot
+            dropped = dropped + (arrive & ~(all_ok & has_slot)).astype(jnp.int32)
+
+            probs = policy_probs(params.policy_id, params.rates, pm_grid, avail)
+            logits = jnp.where(probs > 0, jnp.log(jnp.maximum(probs, 1e-12)), -1e9)
+            pick_keys = jax.random.split(k_pick, G)
+            choice = jax.vmap(jax.random.categorical)(pick_keys, logits)  # [G]
+
+            designate = jnp.zeros((G, N), bool).at[jnp.arange(G), choice].set(True)
+            queued = queued | (designate & accept)
+            j_act = j_act.at[slot].set(jnp.where(accept, True, j_act[slot]))
+            j_proc = j_proc.at[slot].set(jnp.where(accept, False, j_proc[slot]))
+            j_stage = j_stage.at[slot].set(jnp.where(accept, 0, j_stage[slot]))
+            j_dev = j_dev.at[slot].set(jnp.where(accept, choice, j_dev[slot]))
+            j_rem = j_rem.at[slot].set(jnp.where(accept, 0.0, j_rem[slot]))
+
+            # 7) telemetry
+            ps_sum = ps_sum + jnp.sum(~gamma).astype(jnp.int32)
+            batt_sum = batt_sum + jnp.mean(E)
+
+            ctr = (completed, dropped, arrivals, ps_sum, batt_sum)
+            return (E, gamma, queued, j_act, j_proc, j_stage, j_dev, j_rem, j_pm, ctr), None
+
         carry = (
-            jnp.full((G, N), e_init, jnp.float32),  # E
+            params.e_init.astype(jnp.float32),  # E
             jnp.ones((G, N), bool),  # gamma (active)
             jnp.zeros((G, N), bool),  # queued
             jnp.zeros((n_jobs,), bool),  # j_act
@@ -229,18 +453,130 @@ def build_runner(
                 jnp.float32(0.0),
             ),
         )
-        keys = jax.random.split(key, config.n_steps)
+        keys = jax.random.split(key, n_steps)
         carry, _ = jax.lax.scan(step, carry, keys)
         completed, dropped, arrivals, ps_sum, batt_sum = carry[-1]
         return {
             "completed": completed,
             "dropped": dropped,
             "arrivals": arrivals,
-            "downtime_fraction": ps_sum / (config.n_steps * G * N),
-            "mean_battery": batt_sum / config.n_steps,
+            "downtime_fraction": ps_sum / (n_steps * G * N),
+            "mean_battery": batt_sum / n_steps,
         }
 
-    return jax.jit(run)
+    return run
+
+
+@functools.lru_cache(maxsize=None)
+def build_runner(
+    n_groups: int, n_per_group: int, n_steps: int, n_jobs: int | None = None
+):
+    """Jitted ``run(params, key) -> metrics`` for one network *shape*.
+
+    Cached by shape, so repeated calls share one compiled executable.
+    """
+    if n_jobs is None:
+        n_jobs = 2 * n_per_group  # <= N queued + N processing per group
+    return jax.jit(_make_run(n_groups, n_per_group, n_steps, n_jobs))
+
+
+@functools.lru_cache(maxsize=None)
+def _sweep_runner(n_groups: int, n_per_group: int, n_steps: int, n_jobs: int | None):
+    """Jitted ``(stacked_params [S,...], keys [R]) -> metrics [S, R]``."""
+    if n_jobs is None:
+        n_jobs = 2 * n_per_group
+    run = _make_run(n_groups, n_per_group, n_steps, n_jobs)
+    mc = jax.vmap(run, in_axes=(None, 0))  # Monte-Carlo axis
+    return jax.jit(jax.vmap(mc, in_axes=(0, None)))  # scenario axis
+
+
+def _run_sweep(
+    stacked: ScenarioParams, n_steps: int, n_runs: int, seed: int
+) -> SweepResult:
+    G, N = stacked.network_shape
+    runner = _sweep_runner(G, N, n_steps, None)
+    keys = jax.random.split(jax.random.PRNGKey(seed), n_runs)
+    out = jax.tree_util.tree_map(np.asarray, runner(stacked, keys))
+    return SweepResult(
+        completed=out["completed"],
+        dropped=out["dropped"],
+        arrivals=out["arrivals"],
+        downtime_fraction=out["downtime_fraction"],
+        mean_battery=out["mean_battery"],
+    )
+
+
+def simulate_sweep(
+    topology: NetworkTopology | None,
+    scenarios: Sequence[SimConfig | ScenarioParams] | ScenarioParams,
+    *,
+    n_runs: int = 100,
+    seed: int = 0,
+    n_steps: int | None = None,
+    long_term_rates: np.ndarray | None = None,
+    xi_lim: float = 0.01,
+) -> SweepResult:
+    """Run a whole scenario grid as ONE compiled executable.
+
+    ``scenarios`` may be a sequence of :class:`SimConfig` (lowered on
+    ``topology``), a sequence of prebuilt :class:`ScenarioParams` (which
+    may come from *different* same-shape topologies — pass any or no
+    topology), or an already-stacked :class:`ScenarioParams` with a
+    leading sweep axis. All scenarios share one Monte-Carlo key set, so a
+    1-element sweep is bit-for-bit identical to :func:`simulate` with the
+    same seed.
+
+    ``n_steps`` is the only non-shape static left: required when passing
+    raw :class:`ScenarioParams`, inferred (and checked uniform) from
+    :class:`SimConfig` entries.
+    """
+    if isinstance(scenarios, ScenarioParams):
+        if not scenarios.grid_shape:
+            raise ValueError("stacked ScenarioParams needs a leading sweep axis")
+        if n_steps is None:
+            raise ValueError("n_steps is required with raw ScenarioParams")
+        return _run_sweep(scenarios, n_steps, n_runs, seed)
+
+    scenarios = list(scenarios)
+    if not scenarios:
+        raise ValueError("need at least one scenario")
+    configs = [s for s in scenarios if isinstance(s, SimConfig)]
+    if configs:
+        steps = {c.n_steps for c in configs}
+        if n_steps is None:
+            if len(steps) != 1:
+                raise ValueError(f"scenarios disagree on n_steps: {sorted(steps)}")
+            (n_steps,) = steps
+        elif steps - {n_steps}:
+            raise ValueError(f"scenarios disagree on n_steps: {sorted(steps)}")
+        if topology is None:
+            raise ValueError("SimConfig scenarios need a topology")
+    if n_steps is None:
+        raise ValueError("n_steps is required with raw ScenarioParams")
+    # Pad configs to the widest threshold table in the whole mixed list —
+    # including prebuilt ScenarioParams — so they stack.
+    n_thr = max(
+        [len(c.pm_thresholds) for c in configs]
+        + [
+            int(s.pm_thresholds.shape[-1])
+            for s in scenarios
+            if isinstance(s, ScenarioParams)
+        ],
+        default=0,
+    )
+    lowered = [
+        scenario_params(
+            topology,
+            s,
+            long_term_rates=long_term_rates,
+            xi_lim=xi_lim,
+            n_thresholds=n_thr,
+        )
+        if isinstance(s, SimConfig)
+        else s
+        for s in scenarios
+    ]
+    return _run_sweep(stack_scenarios(lowered), n_steps, n_runs, seed)
 
 
 def simulate(
@@ -252,27 +588,16 @@ def simulate(
     long_term_rates: np.ndarray | None = None,
     xi_lim: float = 0.01,
 ) -> SimResult:
-    """Run ``n_runs`` Monte-Carlo repetitions of the network simulation.
+    """Run ``n_runs`` Monte-Carlo repetitions of one scenario.
 
-    ``long_term_rates`` (Eq. 6 numerators) are computed from the semi-Markov
-    model when needed and not provided.
+    A thin wrapper over the sweep engine (a 1-element grid), so scalar
+    and sweep runs share one compiled executable per network shape.
     """
-    if config.n_groups != topology.n_groups or config.n_per_group != topology.n_per_group:
-        raise ValueError("config/topology shape mismatch")
-    lo, hi = topology.arrival_bounds()
-    if long_term_rates is None and config.policy in ("long_term", "adaptive"):
-        long_term_rates = topology.long_term_rates(xi_lim)
-    runner = build_runner(config, lo, hi, long_term_rates)
-    keys = jax.random.split(jax.random.PRNGKey(seed), n_runs)
-    out = jax.vmap(runner)(keys)
-    out = jax.tree_util.tree_map(np.asarray, out)
-    return SimResult(
-        completed=out["completed"],
-        dropped=out["dropped"],
-        arrivals=out["arrivals"],
-        downtime_fraction=out["downtime_fraction"],
-        mean_battery=out["mean_battery"],
+    params = scenario_params(
+        topology, config, long_term_rates=long_term_rates, xi_lim=xi_lim
     )
+    sweep = _run_sweep(stack_scenarios([params]), config.n_steps, n_runs, seed)
+    return sweep[0]
 
 
 def simulate_single_device(
@@ -285,16 +610,8 @@ def simulate_single_device(
 ) -> SimResult:
     """Paper Fig. 2a: one device, one group (power-mode study)."""
     cfg = dataclasses.replace(config, n_groups=1, n_per_group=1, policy="uniform")
-    runner = build_runner(
+    params = scenario_from_config(
         cfg, np.array([[arrival_lo]]), np.array([[arrival_hi]]), np.ones((1, 1))
     )
-    keys = jax.random.split(jax.random.PRNGKey(seed), n_runs)
-    out = jax.vmap(runner)(keys)
-    out = jax.tree_util.tree_map(np.asarray, out)
-    return SimResult(
-        completed=out["completed"],
-        dropped=out["dropped"],
-        arrivals=out["arrivals"],
-        downtime_fraction=out["downtime_fraction"],
-        mean_battery=out["mean_battery"],
-    )
+    sweep = _run_sweep(stack_scenarios([params]), cfg.n_steps, n_runs, seed)
+    return sweep[0]

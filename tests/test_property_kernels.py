@@ -4,6 +4,9 @@ within TPU-plausible bounds, Pallas (interpret) vs jnp oracle."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed (test extra)")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

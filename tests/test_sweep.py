@@ -1,0 +1,212 @@
+"""Sweep-engine tests: scalar/sweep equivalence, compile accounting,
+heterogeneous per-device scenarios, and SimConfig validation."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import simulator
+from repro.core.network import paper_topology
+from repro.core.policies import POLICY_IDS, POLICY_LIST, POLICIES
+from repro.core.simulator import (
+    ScenarioParams,
+    SimConfig,
+    scenario_from_config,
+    scenario_params,
+    simulate,
+    simulate_sweep,
+    stack_scenarios,
+)
+
+
+class TestSweepScalarEquivalence:
+    def test_one_element_grid_bit_for_bit(self):
+        """simulate == simulate_sweep over a 1-element grid, same seed."""
+        topo = paper_topology()
+        cfg = SimConfig(n_groups=3, n_per_group=3, n_steps=60, p_arrival=0.7,
+                        policy="adaptive")
+        scalar = simulate(topo, cfg, n_runs=16, seed=3)
+        sweep = simulate_sweep(topo, [cfg], n_runs=16, seed=3)
+        assert len(sweep) == 1
+        for field in ("completed", "dropped", "arrivals", "downtime_fraction",
+                      "mean_battery"):
+            np.testing.assert_array_equal(
+                getattr(sweep[0], field), getattr(scalar, field), err_msg=field
+            )
+
+    def test_multi_point_rows_match_scalar(self):
+        """Each row of a mixed-policy/mixed-p grid equals its scalar run —
+        vmap batching over the scenario axis must not perturb results."""
+        topo = paper_topology(arrival_means=(3.0, 5.0, 7.0))
+        cfgs = [
+            SimConfig(n_groups=3, n_per_group=3, n_steps=50, p_arrival=p, policy=pol)
+            for p in (0.4, 0.9)
+            for pol in ("uniform", "long_term", "adaptive")
+        ]
+        sweep = simulate_sweep(topo, cfgs, n_runs=8, seed=0)
+        for i, cfg in enumerate(cfgs):
+            scalar = simulate(topo, cfg, n_runs=8, seed=0)
+            np.testing.assert_array_equal(sweep.completed[i], scalar.completed)
+            np.testing.assert_array_equal(
+                sweep.downtime_fraction[i], scalar.downtime_fraction
+            )
+
+    def test_single_device_padded_tables_match(self):
+        """Fixed-PM scenarios padded to the dynamic table length behave
+        identically to their unpadded lowering."""
+        cfg = SimConfig(n_groups=1, n_per_group=1, n_steps=80, p_arrival=0.6,
+                        pm_thresholds=(), pm_allowed=(2,))
+        lo, hi = np.array([[7]]), np.array([[13]])
+        plain = scenario_from_config(cfg, lo, hi)
+        padded = scenario_from_config(cfg, lo, hi, n_thresholds=2)
+        r_plain = simulate_sweep(None, [plain], n_runs=8, n_steps=80)
+        r_pad = simulate_sweep(None, [padded], n_runs=8, n_steps=80)
+        np.testing.assert_array_equal(r_plain.completed, r_pad.completed)
+        np.testing.assert_array_equal(r_plain.mean_battery, r_pad.mean_battery)
+
+
+class TestCompileAccounting:
+    def test_one_compile_per_shape_across_sweep(self):
+        """A multi-point sweep over one network shape traces exactly once,
+        and re-running with different scenario values does not re-trace."""
+        # Distinctive shape so other tests' cached runners don't interfere.
+        topo = paper_topology(n_groups=2, n_per_group=4,
+                              arrival_means=(4.0, 6.0, 8.0, 10.0))
+        simulator.reset_trace_counts()
+        cfgs = [
+            SimConfig(n_groups=2, n_per_group=4, n_steps=37, p_arrival=p, policy=pol)
+            for p in (0.3, 0.6, 0.9)
+            for pol in ("uniform", "adaptive")
+        ]
+        simulate_sweep(topo, cfgs, n_runs=4)
+        counts = simulator.trace_counts()
+        assert counts == {(2, 4, 37, 8): 1}
+        # Same shape, new parameter values -> cache hit, still one trace.
+        cfgs2 = [dataclasses.replace(c, p_arrival=0.5, e_th=20.0, e_th_hi=30.0)
+                 for c in cfgs]
+        simulate_sweep(topo, cfgs2, n_runs=4)
+        assert simulator.trace_counts() == {(2, 4, 37, 8): 1}
+
+    def test_scalar_reuses_sweep_executable(self):
+        """simulate() is a 1-element sweep; repeated configs of one shape
+        share a single compile."""
+        topo = paper_topology(n_groups=2, n_per_group=2, arrival_means=(5.0, 9.0))
+        simulator.reset_trace_counts()
+        for p in (0.2, 0.5, 0.8):
+            simulate(topo, SimConfig(n_groups=2, n_per_group=2, n_steps=23,
+                                     p_arrival=p), n_runs=4)
+        assert simulator.trace_counts() == {(2, 2, 23, 4): 1}
+
+
+class TestHeterogeneousDevices:
+    def test_per_device_thresholds(self):
+        """Per-device hysteresis thresholds (inexpressible pre-sweep):
+        a device with a near-full power-save band must accrue downtime
+        while its scenario twin with a tiny band does not."""
+        cfg = SimConfig(n_groups=1, n_per_group=2, n_steps=120, p_arrival=0.0)
+        lo = np.full((1, 2), 2)
+        hi = np.full((1, 2), 4)
+        base = scenario_from_config(cfg, lo, hi)
+        hetero = dataclasses.replace(
+            base,
+            e_init=jnp.asarray([[100.0, 50.0]], jnp.float32),
+            e_th=jnp.asarray([[10.0, 96.0]], jnp.float32),
+            e_th_hi=jnp.asarray([[25.0, 98.0]], jnp.float32),
+        )
+        res = simulate_sweep(None, [base, hetero], n_runs=8, n_steps=120)
+        assert res.downtime_fraction[0].max() == 0.0
+        # Device 1 of the hetero scenario starts below e_th=96 with harvest
+        # <= 4/slot: it spends many slots recharging in power save.
+        assert res.downtime_fraction[1].min() > 0.0
+
+    def test_per_device_pm_tables(self):
+        """A group mixing a fast (kappa=1) and a slow (kappa=3) device
+        completes more than an all-slow group under uniform routing."""
+        cfg = SimConfig(n_groups=1, n_per_group=2, n_steps=150, p_arrival=1.0,
+                        pm_thresholds=(), pm_allowed=(1,))
+        lo = np.full((1, 2), 20)
+        hi = np.full((1, 2), 30)
+        slow = scenario_from_config(cfg, lo, hi)
+        kappa = np.asarray(slow.kappa).copy()
+        kappa[0, 1, 1] = 1.0  # device 1: 3 slots/stage -> 1 slot/stage
+        mixed = dataclasses.replace(slow, kappa=jnp.asarray(kappa))
+        res = simulate_sweep(None, [slow, mixed], n_runs=16, n_steps=150)
+        assert res.completed[1].mean() > res.completed[0].mean()
+
+
+class TestStacking:
+    def test_mismatched_tables_rejected(self):
+        lo, hi = np.array([[5]]), np.array([[9]])
+        a = scenario_from_config(
+            SimConfig(n_groups=1, n_per_group=1, pm_thresholds=(), pm_allowed=(1,)),
+            lo, hi,
+        )
+        b = scenario_from_config(SimConfig(n_groups=1, n_per_group=1), lo, hi)
+        with pytest.raises(ValueError, match="n_thresholds"):
+            stack_scenarios([a, b])
+
+    def test_mixed_config_and_params_pad_to_widest(self):
+        """SimConfig entries pad up to a prebuilt ScenarioParams' wider
+        threshold table inside one mixed simulate_sweep list."""
+        topo = paper_topology(n_groups=1, n_per_group=1, arrival_means=(8.0,))
+        lo, hi = topo.arrival_bounds()
+        wide = scenario_from_config(
+            SimConfig(n_groups=1, n_per_group=1, n_steps=30), lo, hi, n_thresholds=3
+        )
+        cfg = SimConfig(n_groups=1, n_per_group=1, n_steps=30,
+                        pm_thresholds=(), pm_allowed=(2,))
+        res = simulate_sweep(topo, [cfg, wide], n_runs=4)
+        assert len(res) == 2
+        scalar = simulate(topo, cfg, n_runs=4)
+        np.testing.assert_array_equal(res.completed[0], scalar.completed)
+
+    def test_mixed_n_steps_rejected(self):
+        topo = paper_topology()
+        cfgs = [
+            SimConfig(n_groups=3, n_per_group=3, n_steps=50),
+            SimConfig(n_groups=3, n_per_group=3, n_steps=60),
+        ]
+        with pytest.raises(ValueError, match="n_steps"):
+            simulate_sweep(topo, cfgs, n_runs=2)
+
+
+class TestPolicyDispatch:
+    def test_policy_ids_cover_registry(self):
+        assert set(POLICY_IDS) == set(POLICIES)
+        for name, i in POLICY_IDS.items():
+            assert POLICY_LIST[i] is POLICIES[name]
+
+    def test_scenario_carries_policy_id(self):
+        topo = paper_topology()
+        for name, i in POLICY_IDS.items():
+            p = scenario_params(
+                topo,
+                SimConfig(n_groups=3, n_per_group=3, policy=name),
+                long_term_rates=np.ones((3, 3)),
+            )
+            assert int(p.policy_id) == i
+
+
+class TestSimConfigValidation:
+    def test_inverted_hysteresis_rejected(self):
+        """Mirrors DeviceModel's 0 <= e_th < e_th_hi <= e_max check."""
+        with pytest.raises(ValueError, match="e_th"):
+            SimConfig(n_groups=1, n_per_group=1, e_th=30.0, e_th_hi=20.0)
+
+    def test_threshold_above_capacity_rejected(self):
+        with pytest.raises(ValueError, match="e_th"):
+            SimConfig(n_groups=1, n_per_group=1, e_th=50.0, e_th_hi=120.0,
+                      e_max=100.0)
+
+    def test_negative_threshold_rejected(self):
+        with pytest.raises(ValueError, match="e_th"):
+            SimConfig(n_groups=1, n_per_group=1, e_th=-1.0)
+
+    def test_e_init_out_of_range_rejected(self):
+        with pytest.raises(ValueError, match="e_init"):
+            SimConfig(n_groups=1, n_per_group=1, e_init=150.0)
+
+    def test_valid_config_accepted(self):
+        SimConfig(n_groups=1, n_per_group=1, e_th=0.0, e_th_hi=100.0, e_max=100.0)
