@@ -1,6 +1,8 @@
 """Serving-engine benchmark: the paper's scheduler driving real decode
-compute on a tiny model — tokens/s and downtime per policy, plus a
-failover run (tokens keep flowing after a replica dies).
+compute on a tiny model — tokens/s and downtime per policy, a failover
+run (tokens keep flowing after a replica dies), and the continuous-
+batching sweep (tokens/s at max_batch 1/4/16; the speedup is recorded in
+``BENCH_serve_batch.json``).
 
 Before the heavy real-compute runs, the abstract network simulator
 predicts each policy's downtime for the same fleet shape via one
@@ -9,7 +11,11 @@ the sweep engine doubles as the serving fleet's capacity planner."""
 
 from __future__ import annotations
 
+import argparse
 import dataclasses
+import json
+import pathlib
+import time
 
 import jax
 import numpy as np
@@ -22,27 +28,39 @@ from repro.serving import PipelineServer
 
 from .common import csv_row, timed
 
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_serve_batch.json"
 
-def _server(policy: str, seed: int = 0, harvest=(6.0, 10.0)):
+
+def _model():
     cfg = dataclasses.replace(
         get_smoke_config("stablelm-1.6b"), dtype="float32", param_dtype="float32"
     )
     model = build_model(cfg)
     params = init_from_template(model.template, jax.random.PRNGKey(0), "float32")
+    return cfg, model, params
+
+
+def _server(policy: str, seed: int = 0, harvest=(6.0, 10.0), **kw):
+    _, model, params = _model()
     return PipelineServer(
         model,
         params,
-        n_groups=3,
-        n_replicas=3,
+        n_groups=kw.pop("n_groups", 3),
+        n_replicas=kw.pop("n_replicas", 3),
         policy=policy,
         harvest_bounds=harvest,
-        max_len=64,
+        max_len=kw.pop("max_len", 64),
         seed=seed,
+        **kw,
     )
 
 
 def _planned_downtime(
-    policies: tuple[str, ...], harvest=(6.0, 10.0), arrival_p: float = 0.5
+    policies: tuple[str, ...],
+    harvest=(6.0, 10.0),
+    arrival_p: float = 0.5,
+    n_slots: int = 60,
+    n_runs: int = 64,
 ) -> dict[str, float]:
     """Abstract-model downtime forecast for the server's (G=3, R=3) fleet:
     one vmapped sweep over the candidate policies, one compile."""
@@ -52,29 +70,115 @@ def _planned_downtime(
     )
     cfgs = [
         SimConfig(
-            n_groups=3, n_per_group=3, n_steps=60, p_arrival=arrival_p, policy=p
+            n_groups=3, n_per_group=3, n_steps=n_slots, p_arrival=arrival_p, policy=p
         )
         for p in policies
     ]
-    res = simulate_sweep(topo, cfgs, n_runs=64)
+    res = simulate_sweep(topo, cfgs, n_runs=n_runs)
     return {p: float(res.downtime_fraction[i].mean()) for i, p in enumerate(policies)}
 
 
-def run() -> list[str]:
+def batch_sweep(
+    batch_sizes=(1, 4, 16),
+    *,
+    n_requests: int = 16,
+    n_tokens: int = 32,
+    prompt_len: int = 6,
+    warmup_slots: int = 6,
+    smoke: bool = False,
+) -> tuple[list[str], dict]:
+    """Continuous-batching throughput: the same n_requests × n_tokens
+    workload drained through servers of increasing ``max_batch``. One
+    masked decode dispatch serves every resident request, so tokens/s
+    scales with occupancy while the per-slot dispatch count stays flat."""
+    cfg, model, params = _model()
+    rows, report = [], {}
+    for mb in batch_sizes:
+        server = PipelineServer(
+            model,
+            params,
+            n_groups=2,
+            n_replicas=1,
+            policy="uniform",
+            harvest_bounds=(60.0, 80.0),  # energy-unconstrained: pure compute
+            max_len=128,
+            max_batch=mb,
+            seed=0,
+        )
+        reqs = [
+            server.submit((np.arange(prompt_len) + i) % cfg.vocab_size, n_tokens)
+            for i in range(n_requests)
+        ]
+        for _ in range(warmup_slots):  # compile prefill/decode dispatches
+            server.step()
+        warm_tokens = server.stats.tokens_generated
+        warm_decode_calls = server.stats.decode_calls
+        t0 = time.perf_counter()
+        steps = 0
+        while not all(r.done for r in reqs):
+            server.step()
+            steps += 1
+            if steps > 100 * n_requests * n_tokens:  # pragma: no cover
+                raise RuntimeError("batch sweep did not drain")
+        dt = time.perf_counter() - t0
+        tokens = server.stats.tokens_generated - warm_tokens
+        tps = tokens / dt
+        report[str(mb)] = {
+            "tokens_per_s": round(tps, 1),
+            "wall_s": round(dt, 3),
+            "tokens": tokens,
+            "decode_calls": server.stats.decode_calls - warm_decode_calls,
+            "queued_jobs": server.stats.queued_jobs,
+        }
+        rows.append(
+            csv_row(
+                f"serve/batch{mb}",
+                1e6 / max(tps, 1e-9),
+                f"tokens_per_s={tps:.1f} tokens={tokens} "
+                f"decode_calls={report[str(mb)]['decode_calls']} "
+                f"queued={server.stats.queued_jobs}",
+            )
+        )
+    lo, hi = str(batch_sizes[0]), str(batch_sizes[-1])
+    speedup = report[hi]["tokens_per_s"] / max(report[lo]["tokens_per_s"], 1e-9)
+    report_full = {
+        "model": cfg.name,
+        "n_requests": n_requests,
+        "n_tokens": n_tokens,
+        "prompt_len": prompt_len,
+        "smoke": smoke,
+        "batch": report,
+        f"speedup_{hi}_vs_{lo}": round(speedup, 2),
+    }
+    rows.append(
+        csv_row(
+            "serve/batch_speedup",
+            0.0,
+            f"batch{hi}_vs_batch{lo}={speedup:.2f}x",
+        )
+    )
+    if not smoke:
+        BENCH_JSON.write_text(json.dumps(report_full, indent=2) + "\n")
+    return rows, report_full
+
+
+def run(smoke: bool = False) -> list[str]:
     rows = []
+    n_slots = 20 if smoke else 60
     policies = ("uniform", "adaptive")
-    plan = _planned_downtime(policies)
+    plan = _planned_downtime(policies, n_slots=n_slots, n_runs=16 if smoke else 64)
     for policy in policies:
         server = _server(policy)
         stats, dt = timed(
-            server.run, 60, arrival_p=0.5, prompt_len=6, n_tokens=2, repeat=1
+            server.run, n_slots, arrival_p=0.5, prompt_len=6, n_tokens=2, repeat=1
         )
         rows.append(
             csv_row(
                 f"serve/{policy}",
                 dt * 1e6 / max(stats.tokens_generated, 1),
                 f"tokens={stats.tokens_generated} jobs={stats.completed_jobs} "
-                f"dropped={stats.dropped_jobs} downtime={stats.downtime_fraction:.3f} "
+                f"dropped={stats.dropped_jobs} queued={stats.queued_jobs} "
+                f"downtime={stats.downtime_fraction:.3f} "
                 f"planned_downtime={plan[policy]:.3f}",
             )
         )
@@ -84,7 +188,9 @@ def run() -> list[str]:
     for _ in range(4):
         server.step()
     server.fail_replica(req.stage, req.replicas[req.stage])
-    stats, dt = timed(server.run, 80, arrival_p=0.3, n_tokens=2, repeat=1)
+    stats, dt = timed(
+        server.run, 30 if smoke else 80, arrival_p=0.3, n_tokens=2, repeat=1
+    )
     rows.append(
         csv_row(
             "serve/failover",
@@ -93,12 +199,27 @@ def run() -> list[str]:
             f"job_done={req.done}",
         )
     )
+    # Continuous-batching throughput sweep.
+    if smoke:
+        batch_rows, _ = batch_sweep(
+            (1, 4, 16), n_requests=8, n_tokens=8, smoke=True
+        )
+    else:
+        batch_rows, _ = batch_sweep((1, 4, 16))
+    rows.extend(batch_rows)
     return rows
 
 
 def main() -> None:
-    for row in run():
-        print(row)
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="small CI run: fewer requests/tokens, no BENCH_serve_batch.json",
+    )
+    args = ap.parse_args()
+    for row in run(smoke=args.smoke):
+        print(row, flush=True)
 
 
 if __name__ == "__main__":

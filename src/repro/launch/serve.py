@@ -29,6 +29,10 @@ def main() -> None:
         "--policy", choices=["uniform", "long_term", "adaptive"], default="adaptive"
     )
     ap.add_argument("--slots", type=int, default=60)
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="continuous-batching slots per (group, replica)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="pending-queue bound (backpressure); None = unbounded")
     ap.add_argument("--arrival-p", type=float, default=0.5)
     ap.add_argument("--harvest", type=float, nargs=2, default=(6.0, 10.0))
     ap.add_argument("--seed", type=int, default=0)
@@ -47,13 +51,17 @@ def main() -> None:
         policy=args.policy,
         harvest_bounds=tuple(args.harvest),
         max_len=128,
+        max_batch=args.max_batch,
+        max_queue=args.max_queue,
         seed=args.seed,
     )
     stats = server.run(args.slots, arrival_p=args.arrival_p)
     print(
         f"policy={args.policy}: submitted={stats.submitted} "
         f"completed={stats.completed_jobs} dropped={stats.dropped_jobs} "
-        f"tokens={stats.tokens_generated} downtime={stats.downtime_fraction:.3f} "
+        f"queued={stats.queued_jobs} tokens={stats.tokens_generated} "
+        f"decode_calls={stats.decode_calls} "
+        f"downtime={stats.downtime_fraction:.3f} "
         f"rerouted={stats.rerouted_stages}"
     )
 

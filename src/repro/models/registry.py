@@ -2,12 +2,24 @@
 
 ``Model`` bundles the per-family entry points so the launcher, trainer,
 serving engine, and dry-run never branch on family.
+
+Batched serving layout
+----------------------
+``prefill_batch`` / ``decode_batch`` are the continuous-batching entry
+points: every per-request cache (inner batch dim 1) is stacked on a new
+leading *slot* axis and the whole stack advances in one call via
+``jax.vmap`` over the single-request functions. Slots are fully
+independent — per-slot context lengths live in the stacked ``cache["len"]``
+vector — so the batched step is numerically the per-request step, just
+dispatched once for the whole resident batch.
 """
 
 from __future__ import annotations
 
 import dataclasses
 from typing import Any, Callable
+
+import jax
 
 from . import encdec, transformer
 from .common import ModelConfig
@@ -23,32 +35,56 @@ class Model:
     prefill: Callable  # (params, batch, max_len) -> (logits, cache)
     decode_step: Callable  # (params, token, cache) -> (logits, cache)
     cache_shapes: Callable  # (batch, max_len, [enc_len]) -> SDS tree
+    prefill_batch: Callable  # (params, batch [N,1,...], max_len) -> stacked
+    decode_batch: Callable  # (params, token [N,1,1(,D)], caches [N,...]) -> stacked
 
     @property
     def name(self) -> str:
         return self.cfg.name
 
 
+def _batched_entry_points(prefill: Callable, decode_step: Callable):
+    """vmap the single-request entry points over a leading slot axis."""
+
+    def prefill_batch(params, batch, max_len):
+        return jax.vmap(lambda b: prefill(params, b, max_len))(batch)
+
+    def decode_batch(params, token, caches):
+        return jax.vmap(lambda t, c: decode_step(params, t, c))(token, caches)
+
+    return prefill_batch, decode_batch
+
+
 def build_model(cfg: ModelConfig) -> Model:
     cfg.validate()
     if cfg.is_encdec:
+        prefill = lambda p, b, max_len: encdec.prefill(p, b, cfg, max_len=max_len)
+        decode = lambda p, t, c: encdec.decode_step(p, t, c, cfg)
+        prefill_batch, decode_batch = _batched_entry_points(prefill, decode)
         return Model(
             cfg=cfg,
             template=encdec.encdec_template(cfg),
             forward=lambda p, b: encdec.forward(p, b, cfg),
-            prefill=lambda p, b, max_len: encdec.prefill(p, b, cfg, max_len=max_len),
-            decode_step=lambda p, t, c: encdec.decode_step(p, t, c, cfg),
+            prefill=prefill,
+            decode_step=decode,
             cache_shapes=lambda batch, max_len, enc_len=None: encdec.init_cache_shapes(
                 cfg, batch, max_len, enc_len if enc_len is not None else max_len
             ),
+            prefill_batch=prefill_batch,
+            decode_batch=decode_batch,
         )
+    prefill = lambda p, b, max_len: transformer.prefill(p, b, cfg, max_len=max_len)
+    decode = lambda p, t, c: transformer.decode_step(p, t, c, cfg)
+    prefill_batch, decode_batch = _batched_entry_points(prefill, decode)
     return Model(
         cfg=cfg,
         template=transformer.lm_template(cfg),
         forward=lambda p, b: transformer.forward(p, b, cfg),
-        prefill=lambda p, b, max_len: transformer.prefill(p, b, cfg, max_len=max_len),
-        decode_step=lambda p, t, c: transformer.decode_step(p, t, c, cfg),
+        prefill=prefill,
+        decode_step=decode,
         cache_shapes=lambda batch, max_len, enc_len=None: transformer.init_cache_shapes(
             cfg, batch, max_len
         ),
+        prefill_batch=prefill_batch,
+        decode_batch=decode_batch,
     )

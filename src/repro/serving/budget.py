@@ -30,8 +30,13 @@ class ReplicaBudget:
     alive: bool = True  # False = failed node (budget semantics: drained)
 
     def __post_init__(self) -> None:
+        # Mirrors the SimConfig / DeviceModel hysteresis validation.
+        if not (0 <= self.e_th < self.e_th_hi <= self.e_max):
+            raise ValueError("need 0 <= e_th < e_th_hi <= e_max (hysteresis)")
         if self.level is None:
             self.level = self.e_max
+        if not (0 <= self.level <= self.e_max):
+            raise ValueError("need 0 <= level <= e_max")
 
     @property
     def pm(self) -> int:
@@ -59,7 +64,8 @@ class ReplicaBudget:
 
     def recover(self, level: float | None = None) -> None:
         self.alive = True
-        self.level = self.e_th_hi + 1 if level is None else level
+        target = self.e_th_hi + 1 if level is None else level
+        self.level = min(max(float(target), 0.0), self.e_max)
         self._hysteresis()
 
     def _hysteresis(self) -> None:

@@ -2,25 +2,44 @@
 
 ``PipelineServer`` hosts G pipeline groups × R replicas of a partitioned
 model (:mod:`.partition`). Time advances in slots (the paper's delta);
-per slot every replica harvests budget, jobs execute one stage-slot of
-*real* JAX decode compute on their designated replicas, and new requests
-are routed by the energy-aware :class:`Router` (Alg. 1). Replica failure
-(ft/health) is just a drained budget — the router's mass shifts instantly
-and the job's in-flight stage is re-routed to a sibling replica.
+per slot every replica harvests budget, resident requests execute real
+JAX decode compute on their designated replicas, and new requests are
+admitted by the energy-aware :class:`Router` (Alg. 1) or held in a
+pending queue when the fleet is full (backpressure). Replica failure
+(ft/health) is just a drained budget — the router's mass shifts
+instantly and in-flight stage work is re-routed to a sibling replica.
 
-Execution model per job = generate ``n_tokens`` autoregressively: each
-token passes stages 0..G-1. A stage occupies its replica exclusively for
+Continuous batching
+-------------------
+Each (group, replica) owns one static-shaped batched KV cache with
+``max_batch`` per-request slots: every per-request cache (inner batch
+dim 1, per-slot context length in the stacked ``cache["len"]`` vector)
+is stacked on a leading slot axis. Per simulation slot a replica issues
+**one** jitted stage call covering every resident request at that stage
+— a masked ``decode_batch`` over the full slot width (non-participating
+slots keep their cache via a select) plus one vmapped ``prefill_batch``
+per distinct joining prompt length — instead of one Python-level JAX
+dispatch per request. Requests join and leave the batch mid-flight:
+slots are allocated on admission, freed on completion/drop, and
+re-allocated on a sibling after failover (the dead replica's slot is
+lost and the stage re-prefills).
+
+Execution model per request = generate ``n_tokens`` autoregressively:
+each token passes stages 0..G-1. A stage call occupies its replica for
 ``kappa(PM)`` slots (the paper's measured per-mode latency) and charges
-``CE(PM)/kappa`` per slot; the stage's JAX call happens on its first slot
-(hidden states are handed between groups; each stage keeps its own KV
-cache — Petals semantics).
+``CE(PM)/kappa`` per slot *per call* — the paper's device-level job
+cost, now amortized over every request in the batch. Call results
+(tokens / hidden handoffs) are committed when the call completes, so an
+aborted call (replica death mid-call) never corrupts request state.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Any
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -36,19 +55,34 @@ __all__ = ["Request", "PipelineServer", "ServerStats"]
 @dataclasses.dataclass
 class Request:
     rid: int
-    tokens: np.ndarray  # prompt [S]
+    prompt: np.ndarray  # immutable prompt [S] — never mutated after submit
     n_tokens: int  # tokens to generate
     # runtime state
     stage: int = 0
-    replicas: list[int] | None = None
+    replicas: list[int] | None = None  # designated replica per group
+    slot_ids: list[int] | None = None  # batch slot per group
+    cache_ready: list[bool] | None = None  # per-group: slot cache prefilled
     generated: list[int] = dataclasses.field(default_factory=list)
-    caches: list[Any] | None = None  # per-stage caches
     hidden: Any = None  # inter-stage activation
-    stage_started: bool = False
-    stage_pm: int = 1
-    slots_left: int = 0
+    in_call: bool = False  # member of the current stage call
+    queued: bool = False  # waiting for admission (backpressure)
     done: bool = False
     dropped: bool = False
+
+    @property
+    def tokens(self) -> np.ndarray:
+        """Back-compat alias: the immutable prompt."""
+        return self.prompt
+
+
+@dataclasses.dataclass
+class _StageCall:
+    """One in-flight batched stage execution on a (group, replica)."""
+
+    members: list[Request]
+    outputs: list[Any]  # per-member logits/hidden, committed on completion
+    pm: int
+    slots_left: int
 
 
 @dataclasses.dataclass
@@ -56,15 +90,21 @@ class ServerStats:
     submitted: int = 0
     completed_jobs: int = 0
     dropped_jobs: int = 0
+    queued_jobs: int = 0  # submissions that waited in the pending queue
     tokens_generated: int = 0
-    stage_executions: int = 0
+    stage_executions: int = 0  # per-request stage work units
+    prefill_calls: int = 0  # batched JAX dispatches (prefill)
+    decode_calls: int = 0  # batched JAX dispatches (decode)
     rerouted_stages: int = 0
     slots: int = 0
-    downtime_replica_slots: int = 0
+    downtime_replica_slots: int = 0  # whole (replica, slot) pairs down
+    n_groups: int = 1
+    n_replicas: int = 1
 
     @property
     def downtime_fraction(self) -> float:
-        return self.downtime_replica_slots / max(self.slots, 1)
+        denom = self.slots * self.n_groups * self.n_replicas
+        return self.downtime_replica_slots / max(denom, 1)
 
 
 class PipelineServer:
@@ -80,158 +120,372 @@ class PipelineServer:
         harvest_bounds: tuple[float, float] = (6.0, 10.0),
         long_term_rates: np.ndarray | None = None,
         max_len: int = 256,
+        max_batch: int = 4,
+        max_queue: int | None = None,
         seed: int = 0,
     ):
         self.cfg = model.cfg
         self.stages = partition_model(model.cfg, params, n_groups)
         self.G, self.R = n_groups, n_replicas
         self.max_len = max_len
+        self.max_batch = max_batch
+        self.max_queue = max_queue
         self.pm_policy = pm_policy or dynamic_policy(100)
+        # Independent RNG streams: harvest/arrival draws and routing draws
+        # must not be correlated (same-integer seeding would lockstep them).
+        engine_seq, router_seq = np.random.SeedSequence(seed).spawn(2)
+        self._rng = np.random.default_rng(engine_seq)
         # Replicas share stage weights (replication within a group) but
         # have independent budgets/harvests (heterogeneous nodes).
-        rng = np.random.default_rng(seed)
         lo, hi = harvest_bounds
-        centers = rng.uniform(lo, hi, size=(self.G, self.R))
+        centers = self._rng.uniform(lo, hi, size=(self.G, self.R))
         self.harvest = np.stack([centers - 2.0, centers + 2.0], axis=-1).clip(0.0)
         self.budgets = [
             [ReplicaBudget(policy=self.pm_policy) for _ in range(n_replicas)]
             for _ in range(n_groups)
         ]
-        self.router = Router(policy=policy, long_term_rates=long_term_rates, seed=seed)
-        self._rng = rng
-        self.stats = ServerStats()
+        self.router = Router(
+            policy=policy, long_term_rates=long_term_rates, seed=router_seq
+        )
+        self.stats = ServerStats(n_groups=n_groups, n_replicas=n_replicas)
         self._active: list[Request] = []
+        self._pending: collections.deque[Request] = collections.deque()
         self._next_rid = 0
-        self._busy: dict[tuple[int, int], int] = {}  # (g, r) -> rid holding it
+        # Continuous-batching state: per (g, r) slot table, stacked cache,
+        # in-flight call, and the per-stage jitted batched entry points.
+        self._slot_map: dict[tuple[int, int], list[int | None]] = {
+            (g, r): [None] * max_batch
+            for g in range(n_groups)
+            for r in range(n_replicas)
+        }
+        self._caches = {
+            (g, r): self._init_cache(g)
+            for g in range(n_groups)
+            for r in range(n_replicas)
+        }
+        self._calls: dict[tuple[int, int], _StageCall] = {}
+        self._fns = [self._build_stage_fns(g) for g in range(n_groups)]
 
     # ------------------------------------------------------------------
+    # Batched cache plumbing
+    # ------------------------------------------------------------------
+    def _init_cache(self, g: int):
+        """Zeroed slot-stacked cache for stage g: [max_batch, <B=1 cache>]."""
+        model_g, _ = self.stages[g]
+        shapes = model_g.cache_shapes(1, self.max_len)
+        return jax.tree_util.tree_map(
+            lambda s: jnp.zeros((self.max_batch,) + tuple(s.shape), s.dtype), shapes
+        )
+
+    def _build_stage_fns(self, g: int):
+        """Jitted batched stage entry points (one pair per stage, built
+        once so jit caches by shape, not by call site)."""
+        model_g, _ = self.stages[g]
+        max_len = self.max_len
+
+        @jax.jit
+        def prefill_into(params, batch, cache, slot_idx):
+            # batch leaves: [N, 1, S(, D)] — N joining requests, same S.
+            out, new = model_g.prefill_batch(params, batch, max_len)
+            cache = jax.tree_util.tree_map(
+                lambda big, small: big.at[slot_idx].set(small), cache, new
+            )
+            return out, cache
+
+        @jax.jit
+        def decode_masked(params, inp, cache, mask):
+            # inp: [W, 1, 1(, D)] over the full slot width W = max_batch;
+            # mask selects participating slots — the others' caches are
+            # preserved by the select (their computed garbage is dropped).
+            out, new = model_g.decode_batch(params, inp, cache)
+            merged = jax.tree_util.tree_map(
+                lambda n, o: jnp.where(
+                    mask.reshape((mask.shape[0],) + (1,) * (n.ndim - 1)), n, o
+                ),
+                new,
+                cache,
+            )
+            return out, merged
+
+        return prefill_into, decode_masked
+
+    def _alloc_slot(self, g: int, r: int, rid: int) -> int:
+        table = self._slot_map[(g, r)]
+        idx = table.index(None)
+        table[idx] = rid
+        return idx
+
+    def _free_slot(self, g: int, r: int, req: Request) -> None:
+        table = self._slot_map[(g, r)]
+        slot = req.slot_ids[g]
+        if slot is not None and table[slot] == req.rid:
+            table[slot] = None
+
+    def _free_counts(self) -> list[list[int]]:
+        return [
+            [self._slot_map[(g, r)].count(None) for r in range(self.R)]
+            for g in range(self.G)
+        ]
+
+    # ------------------------------------------------------------------
+    # Admission
+    # ------------------------------------------------------------------
     def submit(self, tokens: np.ndarray, n_tokens: int = 8) -> Request | None:
-        """Route a new request (one replica designated per group, Alg. 1)."""
+        """Admit a new request (one replica + batch slot per group, Alg. 1)
+        or hold it in the pending queue when the fleet is full."""
         self.stats.submitted += 1
         req = Request(
-            rid=self._next_rid, tokens=np.asarray(tokens), n_tokens=n_tokens
+            rid=self._next_rid, prompt=np.asarray(tokens), n_tokens=n_tokens
         )
         self._next_rid += 1
-        try:
-            req.replicas = self.router.route(self.budgets)
-        except RouteError:
+        if any(not any(b.alive for b in group) for group in self.budgets):
+            # A whole group is dead: nothing to wait for.
             req.dropped = True
             self.stats.dropped_jobs += 1
             return None
-        req.caches = [None] * self.G
-        self._active.append(req)
+        if self._try_admit(req):
+            return req
+        if self.max_queue is not None and len(self._pending) >= self.max_queue:
+            req.dropped = True
+            self.stats.dropped_jobs += 1
+            return None
+        req.queued = True
+        self._pending.append(req)
+        self.stats.queued_jobs += 1
         return req
 
+    def _try_admit(self, req: Request) -> bool:
+        try:
+            replicas = self.router.route(self.budgets, free_slots=self._free_counts())
+        except RouteError:
+            return False
+        req.replicas = replicas
+        req.slot_ids = [self._alloc_slot(g, replicas[g], req.rid) for g in range(self.G)]
+        req.cache_ready = [False] * self.G
+        req.queued = False
+        self._active.append(req)
+        return True
+
     # ------------------------------------------------------------------
-    def _exec_stage(self, req: Request) -> None:
-        """Run the real JAX compute for the current (token, stage)."""
-        g = req.stage
-        model_g, params_g = self.stages[g]
-        self.stats.stage_executions += 1
-        if req.caches[g] is None:
-            batch = (
-                {"tokens": jnp.asarray(req.tokens)[None, :]}
-                if g == 0
-                else {"hidden": req.hidden}
-            )
-            out, req.caches[g] = model_g.prefill(params_g, batch, self.max_len)
-        else:
+    # Batched stage execution
+    # ------------------------------------------------------------------
+    def _start_call(self, g: int, r: int, members: list[Request]) -> _StageCall:
+        """Issue the batched JAX work for every member and open the call."""
+        _, params_g = self.stages[g]
+        b = self.budgets[g][r]
+        pm = b.pm
+        prefill_into, decode_masked = self._fns[g]
+        outputs: list[Any] = [None] * len(members)
+        cache = self._caches[(g, r)]
+
+        pre = [i for i, m in enumerate(members) if not m.cache_ready[g]]
+        dec = [i for i, m in enumerate(members) if m.cache_ready[g]]
+
+        # Prefills, grouped by prompt/handoff length (one dispatch each).
+        by_len: dict[int, list[tuple[int, Any]]] = {}
+        for i in pre:
+            m = members[i]
             if g == 0:
-                token_or_hidden = jnp.asarray([[req.generated[-1]]])
+                ids = np.asarray(m.prompt, np.int32)
+                if m.generated:
+                    # Failover re-prefill: rebuild the full prefix — prompt
+                    # plus every generated token, the current round's input
+                    # included — from the immutable prompt. The last
+                    # position's hidden/logits then replace the decode step
+                    # the dead replica lost, so decoding stays token-exact
+                    # across any number of failovers.
+                    ids = np.concatenate([ids, np.asarray(m.generated, np.int32)])
+                inp = jnp.asarray(ids)[None, :]
             else:
-                # After an upstream re-prefill (failover) the handoff may
-                # carry the whole prefix; a caching stage only consumes
-                # the newest position.
-                token_or_hidden = (
-                    req.hidden if req.hidden.shape[1] == 1 else req.hidden[:, -1:]
+                inp = m.hidden  # [1, S, D] handoff from the upstream stage
+            by_len.setdefault(int(inp.shape[1]), []).append((i, inp))
+        last = g == self.G - 1
+        key = "tokens" if g == 0 else "hidden"
+        for _length, grp in sorted(by_len.items()):
+            idxs = [i for i, _ in grp]
+            stacked = jnp.stack([x for _, x in grp])
+            slots = jnp.asarray([members[i].slot_ids[g] for i in idxs], jnp.int32)
+            out, cache = prefill_into(params_g, {key: stacked}, cache, slots)
+            self.stats.prefill_calls += 1
+            if last:
+                # One batched argmax + one host sync for the whole group
+                # (a per-request int() would cost one sync per token).
+                toks = np.asarray(jnp.argmax(out[:, 0, -1], axis=-1))
+                for j, i in enumerate(idxs):
+                    outputs[i] = int(toks[j])
+            else:
+                for j, i in enumerate(idxs):
+                    outputs[i] = out[j]
+
+        # Decode: one masked dispatch over the full static slot width.
+        if dec:
+            W = self.max_batch
+            mask = np.zeros((W,), bool)
+            slots = np.asarray([members[i].slot_ids[g] for i in dec], np.int32)
+            mask[slots] = True
+            if g == 0:
+                buf = np.zeros((W, 1, 1), np.int32)
+                for i in dec:
+                    buf[members[i].slot_ids[g], 0, 0] = members[i].generated[-1]
+                inp = jnp.asarray(buf)
+            else:
+                # Assemble on device: the handoffs are device arrays and a
+                # host round-trip per member would not amortize. After an
+                # upstream re-prefill the handoff carries the whole
+                # prefix; a caching stage only consumes the newest position.
+                hs = jnp.stack(
+                    [
+                        m.hidden if m.hidden.shape[1] == 1 else m.hidden[:, -1:]
+                        for m in (members[i] for i in dec)
+                    ]
                 )
-            out, req.caches[g] = model_g.decode_step(
-                params_g, token_or_hidden, req.caches[g]
-            )
+                inp = (
+                    jnp.zeros((W, 1, 1, self.cfg.d_model), hs.dtype)
+                    .at[jnp.asarray(slots)]
+                    .set(hs)
+                )
+            out, cache = decode_masked(params_g, inp, cache, jnp.asarray(mask))
+            self.stats.decode_calls += 1
+            if last:
+                toks = np.asarray(jnp.argmax(out[:, 0, -1], axis=-1))
+                for i in dec:
+                    outputs[i] = int(toks[members[i].slot_ids[g]])
+            else:
+                for i in dec:
+                    outputs[i] = out[members[i].slot_ids[g]]
+
+        self._caches[(g, r)] = cache
+        self.stats.stage_executions += len(members)
+        for m in members:
+            m.in_call = True
+        kappa = self.pm_policy.mode(pm).kappa
+        return _StageCall(
+            members=list(members), outputs=outputs, pm=pm, slots_left=kappa
+        )
+
+    def _commit(self, req: Request, out: Any, g: int) -> None:
+        """Apply a completed stage call's result to the request."""
+        req.in_call = False
+        req.cache_ready[g] = True
         if g == self.G - 1:
-            tok = int(jnp.argmax(out[0, -1]))
-            req.generated.append(tok)
+            req.generated.append(out)  # already an int (batched argmax)
             self.stats.tokens_generated += 1
         else:
             req.hidden = out
+        self._advance(req)
 
+    # ------------------------------------------------------------------
+    # Slot loop
     # ------------------------------------------------------------------
     def step(self) -> None:
         """Advance one slot (the paper's Algorithm 1 outer loop)."""
         self.stats.slots += 1
-        # 1) harvest + hysteresis + downtime telemetry
+        # 1) harvest + hysteresis + downtime telemetry (whole replica-slots)
         for g in range(self.G):
             for r in range(self.R):
                 b = self.budgets[g][r]
                 lo, hi = self.harvest[g, r]
                 b.harvest(self._rng.uniform(lo, hi))
                 if not b.available:
-                    self.stats.downtime_replica_slots += 1 / (self.G * self.R)
+                    self.stats.downtime_replica_slots += 1
 
-        # 2) progress jobs
+        # 2) backpressure queue: admit while capacity allows (FIFO); a
+        #    fully dead group means queued requests have nothing to wait
+        #    for (mirrors the submit-time drop)
+        if self._pending and any(
+            not any(b.alive for b in group) for group in self.budgets
+        ):
+            while self._pending:
+                req = self._pending.popleft()
+                req.dropped = True
+                req.queued = False
+                self.stats.dropped_jobs += 1
+        while self._pending and self._try_admit(self._pending[0]):
+            self._pending.popleft()
+
+        # 3) abort calls on dead replicas; reroute their members
+        for (g, r), call in list(self._calls.items()):
+            if not self.budgets[g][r].alive:
+                del self._calls[(g, r)]
+                for m in call.members:
+                    m.in_call = False
+                    self._reroute_or_drop(m)
+
+        # 4) reroute idle requests whose current-stage replica died
         for req in list(self._active):
-            g = req.stage
-            r = req.replicas[g]
-            b = self.budgets[g][r]
-
-            if not b.alive:
+            if not req.in_call and not self.budgets[req.stage][req.replicas[req.stage]].alive:
                 self._reroute_or_drop(req)
-                continue
+
+        # 5) start one batched call per idle, energy-ready replica
+        for g in range(self.G):
+            for r in range(self.R):
+                if (g, r) in self._calls:
+                    continue
+                b = self.budgets[g][r]
+                if not b.available or not b.can_start():
+                    continue  # power saving / energy gate: jobs held
+                members = [
+                    req
+                    for req in self._active
+                    if req.stage == g and req.replicas[g] == r and not req.in_call
+                ]
+                if members:
+                    self._calls[(g, r)] = self._start_call(g, r, members)
+
+        # 6) advance calls: charge CE(PM)/kappa per slot (device-level,
+        #    amortized over the batch), commit results on completion
+        for (g, r), call in list(self._calls.items()):
+            b = self.budgets[g][r]
             if not b.available:
-                continue  # power saving: stage paused (job held, Sec. III)
-
-            if not req.stage_started:
-                holder = self._busy.get((g, r))
-                if holder is not None and holder != req.rid:
-                    continue  # replica busy with another job's stage
-                if not b.can_start():
-                    continue  # energy gate: CE(PM) <= E
-                req.stage_pm = b.pm
-                req.slots_left = self.pm_policy.mode(b.pm).kappa
-                self._busy[(g, r)] = req.rid
-                self._exec_stage(req)
-                req.stage_started = True
-
-            mode = self.pm_policy.mode(req.stage_pm)
+                continue  # power saving: stage paused (jobs held, Sec. III)
+            mode = self.pm_policy.mode(call.pm)
             b.charge(mode.ce / mode.kappa)
-            req.slots_left -= 1
-            if req.slots_left <= 0:
-                self._busy.pop((g, r), None)
-                req.stage_started = False
-                self._advance(req)
+            call.slots_left -= 1
+            if call.slots_left <= 0:
+                del self._calls[(g, r)]
+                for m, out in zip(call.members, call.outputs):
+                    self._commit(m, out, g)
 
     def _reroute_or_drop(self, req: Request) -> None:
-        """Failure handling: shift the in-flight stage to a sibling."""
+        """Failure handling: shift the in-flight stage to a sibling.
+
+        The failed replica held this stage's slot and KV cache: both are
+        lost and the sibling re-prefills. Stage 0 reconstructs its full
+        context from the immutable prompt + generated tokens; deeper
+        stages would need the prefix re-driven through the pipeline — the
+        engine approximates by restarting them from the latest hidden
+        handoff (documented context loss under failure).
+        """
         g = req.stage
-        self._busy.pop((g, req.replicas[g]), None)
-        req.stage_started = False
-        try:
-            probs = self.router.probabilities(self.budgets)[g]
-            if probs.sum() <= 0:
-                raise RouteError(f"group {g} empty")
-            req.replicas[g] = int(self._rng.choice(len(probs), p=probs / probs.sum()))
-            # The failed replica held this stage's KV cache: it is lost and
-            # the sibling re-prefills. Stage 0 can reconstruct its full
-            # context (prompt + tokens generated so far); deeper stages
-            # would need the prefix re-driven through the pipeline — the
-            # engine approximates by restarting them from the latest
-            # hidden handoff (documented context loss under failure).
-            req.caches[g] = None
-            if g == 0 and req.generated:
-                req.tokens = np.concatenate(
-                    [req.tokens, np.asarray(req.generated[:-1], req.tokens.dtype)]
-                )
-            self.stats.rerouted_stages += 1
-        except RouteError:
+        self._free_slot(g, req.replicas[g], req)
+        req.slot_ids[g] = None
+        if not any(b.alive for b in self.budgets[g]):
+            # The whole group is gone: nothing to fail over to.
             req.dropped = True
+            for gg in range(self.G):
+                self._free_slot(gg, req.replicas[gg], req)
             self._active.remove(req)
             self.stats.dropped_jobs += 1
+            return
+        try:
+            new_r = self.router.reroute(self.budgets, g, free_slots=self._free_counts())
+        except RouteError:
+            # Live siblings exist but are momentarily full / power-saving:
+            # the request stays parked on the dead replica and the reroute
+            # is retried every slot until a sibling slot frees up.
+            return
+        req.replicas[g] = new_r
+        req.slot_ids[g] = self._alloc_slot(g, new_r, req.rid)
+        req.cache_ready[g] = False
+        self.stats.rerouted_stages += 1
 
     def _advance(self, req: Request) -> None:
         req.stage += 1
         if req.stage >= self.G:
             if len(req.generated) >= req.n_tokens:
                 req.done = True
+                for g in range(self.G):
+                    self._free_slot(g, req.replicas[g], req)
                 self._active.remove(req)
                 self.stats.completed_jobs += 1
                 return
@@ -243,6 +497,10 @@ class PipelineServer:
 
     def recover_replica(self, g: int, r: int) -> None:
         self.budgets[g][r].recover()
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._pending)
 
     def run(
         self,

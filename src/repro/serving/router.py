@@ -3,7 +3,12 @@ fleet's request router.
 
 Given the per-replica budgets of each pipeline group, the router returns
 which replica serves each stage of a new request, using uniform /
-long-term / adaptive scheduling (:mod:`repro.core.policies`).
+long-term / adaptive scheduling (:mod:`repro.core.policies`). With the
+continuous-batching engine the router is also queue-depth aware: callers
+pass per-replica free batch-slot counts and the routing mass shifts
+toward replicas with headroom (a replica with zero free slots gets zero
+mass), so ``PipelineServer.submit`` can backpressure into a pending
+queue instead of dropping when the fleet is momentarily full.
 """
 
 from __future__ import annotations
@@ -19,25 +24,32 @@ __all__ = ["Router", "RouteError"]
 
 
 class RouteError(RuntimeError):
-    """No available replica in some group — request must be dropped."""
+    """No admissible replica in some group — request must wait or drop."""
 
 
 @dataclasses.dataclass
 class Router:
     policy: str = "adaptive"  # uniform | long_term | adaptive
     long_term_rates: np.ndarray | None = None  # [G, R] q_lims (Eq. 6)
-    seed: int = 0
+    seed: int | np.random.SeedSequence = 0
 
     def __post_init__(self) -> None:
         if self.policy not in POLICIES:
             raise ValueError(f"unknown policy {self.policy!r}")
         self._rng = np.random.default_rng(self.seed)
 
-    def probabilities(self, budgets: list[list[ReplicaBudget]]) -> list[np.ndarray]:
+    def probabilities(
+        self,
+        budgets: list[list[ReplicaBudget]],
+        free_slots: list[list[int]] | None = None,
+    ) -> list[np.ndarray]:
         """Per-group routing distributions (Alg. 1 lines 7-9).
 
         Groups may have different replica counts (elastic membership), so
-        the result is a list of per-group vectors.
+        the result is a list of per-group vectors. ``free_slots`` (same
+        nesting as ``budgets``) reweights each replica by its free batch
+        capacity: full replicas are masked out and emptier replicas
+        attract proportionally more new requests.
         """
         fn = POLICIES[self.policy]
         out: list[np.ndarray] = []
@@ -49,19 +61,38 @@ class Router:
                 rates = np.ones(R, dtype=np.float32)
             avail = np.array([b.available for b in group])
             pm = np.array([b.pm for b in group])
-            out.append(np.asarray(fn(rates, pm, avail)))
+            p = np.asarray(fn(rates, pm, avail), dtype=np.float64)
+            if free_slots is not None:
+                p = p * np.maximum(np.asarray(free_slots[g], dtype=np.float64), 0.0)
+                total = p.sum()
+                if total > 0:
+                    p = p / total
+            out.append(p)
         return out
 
-    def route(self, budgets: list[list[ReplicaBudget]]) -> list[int]:
+    def _pick(self, p: np.ndarray, g: int) -> int:
+        total = p.sum()
+        if total <= 0:
+            raise RouteError(f"no admissible replica in group {g}")
+        return int(self._rng.choice(len(p), p=p / total))
+
+    def route(
+        self,
+        budgets: list[list[ReplicaBudget]],
+        free_slots: list[list[int]] | None = None,
+    ) -> list[int]:
         """Designate one replica per group for a new request."""
-        probs = self.probabilities(budgets)
-        choice = []
-        for g, p in enumerate(probs):
-            total = p.sum()
-            if total <= 0:
-                raise RouteError(f"no available replica in group {g}")
-            choice.append(int(self._rng.choice(len(p), p=p / total)))
-        return choice
+        probs = self.probabilities(budgets, free_slots)
+        return [self._pick(p, g) for g, p in enumerate(probs)]
+
+    def reroute(
+        self,
+        budgets: list[list[ReplicaBudget]],
+        g: int,
+        free_slots: list[list[int]] | None = None,
+    ) -> int:
+        """Pick a failover sibling in group ``g`` for an in-flight stage."""
+        return self._pick(self.probabilities(budgets, free_slots)[g], g)
 
     def on_membership_change(self, rates: np.ndarray | None) -> None:
         """Elastic event: new long-term rates after add/remove of nodes

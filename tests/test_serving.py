@@ -73,6 +73,37 @@ class TestPartition:
         )
 
 
+def direct_greedy(model, params, prompt, n_tokens, max_len=64):
+    """Monolithic greedy decode — the token-exact reference."""
+    logits, cache = model.prefill(params, {"tokens": jnp.asarray(prompt)[None]}, max_len)
+    toks = [int(jnp.argmax(logits[0, -1]))]
+    for _ in range(n_tokens - 1):
+        logits, cache = model.decode_step(params, jnp.asarray([[toks[-1]]]), cache)
+        toks.append(int(jnp.argmax(logits[0, -1])))
+    return toks
+
+
+class TestBudget:
+    def test_rejects_inverted_hysteresis(self):
+        pol = dynamic_policy(100)
+        with pytest.raises(ValueError):
+            ReplicaBudget(policy=pol, e_th=30.0, e_th_hi=20.0)
+        with pytest.raises(ValueError):
+            ReplicaBudget(policy=pol, e_th=-1.0, e_th_hi=25.0)
+        with pytest.raises(ValueError):
+            ReplicaBudget(policy=pol, e_th=10.0, e_th_hi=150.0, e_max=100.0)
+
+    def test_recover_clamps_to_e_max(self):
+        pol = dynamic_policy(100)
+        b = ReplicaBudget(policy=pol, e_max=100.0, e_th=10.0, e_th_hi=99.5)
+        b.fail()
+        b.recover()
+        assert b.level == 100.0  # e_th_hi + 1 would exceed e_max
+        b.recover(level=500.0)
+        assert b.level == 100.0
+        assert b.available
+
+
 class TestRouter:
     def _budgets(self, levels, G=1):
         pol = dynamic_policy(100)
@@ -101,6 +132,14 @@ class TestRouter:
             b.fail()
         with pytest.raises(RouteError):
             r.route(budgets)
+
+    def test_free_slots_mask_full_replicas(self):
+        r = Router(policy="uniform", seed=0)
+        budgets = self._budgets([50.0, 50.0, 50.0])
+        probs = r.probabilities(budgets, free_slots=[[0, 2, 2]])[0]
+        np.testing.assert_allclose(probs, [0.0, 0.5, 0.5])
+        with pytest.raises(RouteError):
+            r.route(budgets, free_slots=[[0, 0, 0]])
 
 
 class TestEngine:
@@ -169,3 +208,153 @@ class TestEngine:
         )
         stats = server.run(n_slots=60, arrival_p=0.9, prompt_len=4, n_tokens=2)
         assert stats.downtime_fraction > 0.0
+        # Whole replica-slots, counted as integers and normalized by G*R.
+        assert isinstance(stats.downtime_replica_slots, int)
+        assert stats.downtime_replica_slots <= stats.slots * 1 * 2
+        assert stats.downtime_fraction <= 1.0
+
+    def test_rng_streams_independent(self):
+        """Harvest/arrival draws and routing draws come from spawned,
+        uncorrelated SeedSequence streams — not the same integer seed."""
+        cfg, model, params = tiny_model()
+        server = PipelineServer(model, params, n_groups=2, n_replicas=2, seed=7)
+        a = server._rng.uniform(size=16)
+        b = server.router._rng.uniform(size=16)
+        assert not np.allclose(a, b)
+        # Same seed still means a reproducible fleet.
+        other = PipelineServer(model, params, n_groups=2, n_replicas=2, seed=7)
+        np.testing.assert_allclose(server.harvest, other.harvest)
+
+
+class TestContinuousBatching:
+    def test_batched_equals_sequential_and_direct(self):
+        """Same requests through max_batch=1 and max_batch=4 servers give
+        identical tokens, and one stage call serves the whole batch."""
+        cfg, model, params = tiny_model()
+        n_tok = 3
+        prompts = [(np.arange(6) * (i + 1) + i) % cfg.vocab_size for i in range(3)]
+
+        def serve(max_batch):
+            server = PipelineServer(
+                model, params, n_groups=2, n_replicas=1,
+                harvest_bounds=(50.0, 60.0), max_len=64,
+                max_batch=max_batch, seed=5,
+            )
+            reqs = [server.submit(p, n_tokens=n_tok) for p in prompts]
+            for _ in range(300):
+                if all(r.done for r in reqs):
+                    break
+                server.step()
+            assert all(r.done for r in reqs)
+            return server, reqs
+
+        seq_server, seq_reqs = serve(1)
+        bat_server, bat_reqs = serve(4)
+        for s, b, p in zip(seq_reqs, bat_reqs, prompts):
+            assert s.generated == b.generated
+            assert b.generated == direct_greedy(model, params, p, n_tok)
+
+        # Sequential capacity is one request per replica: the other two
+        # waited in the backpressure queue instead of being dropped.
+        assert seq_server.stats.queued_jobs == 2
+        assert seq_server.stats.dropped_jobs == 0
+        assert bat_server.stats.queued_jobs == 0
+
+        # Dispatch accounting: batched serving issues ONE decode call per
+        # (stage, round) for all three residents — 2*(n_tok-1) calls total
+        # — while the sequential server pays per request.
+        assert bat_server.stats.decode_calls == 2 * (n_tok - 1)
+        assert bat_server.stats.prefill_calls == 2
+        assert bat_server.stats.stage_executions == 3 * 2 * n_tok
+        assert seq_server.stats.decode_calls == 3 * 2 * (n_tok - 1)
+        assert bat_server.stats.decode_calls * 3 == seq_server.stats.decode_calls
+
+    def test_two_failovers_token_exact(self):
+        """Regression: two stage-0 failovers must not duplicate prompt
+        tokens in the re-prefill context — generated tokens stay equal to
+        the monolithic greedy decode."""
+        cfg, model, params = tiny_model()
+        server = PipelineServer(
+            model, params, n_groups=2, n_replicas=3,
+            harvest_bounds=(50.0, 60.0), max_len=64, max_batch=2, seed=4,
+        )
+        prompt = np.arange(6) % cfg.vocab_size
+        req = server.submit(prompt, n_tokens=5)
+        fails = 0
+        for _ in range(400):
+            if req.done:
+                break
+            # Kill the stage-0 replica after the 1st and again after the
+            # 2nd generated token: each failover re-prefills from the
+            # prompt + all generated tokens.
+            if fails < 2 and len(req.generated) > fails:
+                server.fail_replica(0, req.replicas[0])
+                fails += 1
+            server.step()
+        assert req.done
+        assert fails == 2
+        assert server.stats.rerouted_stages >= 2
+        assert req.generated == direct_greedy(model, params, prompt, 5)
+        # The prompt itself was never mutated by the failovers.
+        np.testing.assert_array_equal(req.prompt, prompt)
+
+    def test_failover_waits_for_full_sibling(self):
+        """A failover victim whose live siblings are momentarily full is
+        parked and retried, not dropped."""
+        cfg, model, params = tiny_model()
+        server = PipelineServer(
+            model, params, n_groups=1, n_replicas=2,
+            harvest_bounds=(50.0, 60.0), max_len=64, max_batch=1, seed=8,
+        )
+        a = server.submit(np.arange(4), n_tokens=3)
+        b = server.submit(np.arange(4) + 1, n_tokens=2)
+        assert a.replicas[0] != b.replicas[0]  # slot-aware routing spreads them
+        server.step()
+        server.fail_replica(0, a.replicas[0])
+        for _ in range(200):
+            if a.done and b.done:
+                break
+            server.step()
+        assert a.done and b.done
+        assert server.stats.dropped_jobs == 0
+        assert server.stats.rerouted_stages >= 1
+        assert a.generated == direct_greedy(model, params, np.arange(4), 3)
+
+    def test_dead_group_drops_queued_requests(self):
+        cfg, model, params = tiny_model()
+        server = PipelineServer(
+            model, params, n_groups=1, n_replicas=1,
+            harvest_bounds=(50.0, 60.0), max_len=64, max_batch=1, seed=9,
+        )
+        a = server.submit(np.arange(4), n_tokens=4)
+        b = server.submit(np.arange(4) + 1, n_tokens=4)
+        assert b.queued
+        server.fail_replica(0, 0)
+        for _ in range(5):
+            server.step()
+        # Nothing to wait for: both the resident and the queued request drop.
+        assert a.dropped and b.dropped and not b.queued
+        assert server.queue_depth == 0
+        assert server.stats.dropped_jobs == 2
+        stats = server.stats
+        assert stats.submitted == stats.completed_jobs + stats.dropped_jobs
+
+    def test_queue_drains_and_completes(self):
+        cfg, model, params = tiny_model()
+        server = PipelineServer(
+            model, params, n_groups=2, n_replicas=1,
+            harvest_bounds=(50.0, 60.0), max_len=64,
+            max_batch=1, max_queue=1, seed=6,
+        )
+        a = server.submit(np.arange(4), n_tokens=2)
+        b = server.submit(np.arange(4) + 1, n_tokens=2)
+        c = server.submit(np.arange(4) + 2, n_tokens=2)  # queue full -> dropped
+        assert not a.queued and b.queued and c is None
+        assert server.queue_depth == 1
+        assert server.stats.dropped_jobs == 1
+        for _ in range(200):
+            if a.done and b.done:
+                break
+            server.step()
+        assert a.done and b.done
+        assert server.queue_depth == 0
