@@ -35,6 +35,21 @@ def csv_row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.1f},{derived}"
 
 
+def smoke_serving_model(name: str = "stablelm-1.6b"):
+    """fp32 smoke model + params shared by the serving benchmarks."""
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.models import build_model, init_from_template
+
+    cfg = dataclasses.replace(
+        get_smoke_config(name), dtype="float32", param_dtype="float32"
+    )
+    model = build_model(cfg)
+    params = init_from_template(model.template, jax.random.PRNGKey(0), "float32")
+    return cfg, model, params
+
+
 FIG2A_P = 0.62
 FIG2A_ARRIVALS = (7, 13)
 FIG2B_ARRIVALS = (6, 10)

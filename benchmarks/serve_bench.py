@@ -12,32 +12,19 @@ the sweep engine doubles as the serving fleet's capacity planner."""
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import pathlib
 import time
 
-import jax
 import numpy as np
 
-from repro.configs import get_smoke_config
 from repro.core.network import paper_topology
 from repro.core.simulator import SimConfig, simulate_sweep
-from repro.models import build_model, init_from_template
 from repro.serving import PipelineServer
 
-from .common import csv_row, timed
+from .common import csv_row, smoke_serving_model as _model, timed
 
 BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_serve_batch.json"
-
-
-def _model():
-    cfg = dataclasses.replace(
-        get_smoke_config("stablelm-1.6b"), dtype="float32", param_dtype="float32"
-    )
-    model = build_model(cfg)
-    params = init_from_template(model.template, jax.random.PRNGKey(0), "float32")
-    return cfg, model, params
 
 
 def _server(policy: str, seed: int = 0, harvest=(6.0, 10.0), **kw):

@@ -1,0 +1,136 @@
+"""Pallas TPU paged decode-attention kernel (block-table gather).
+
+Serving keeps each replica's KV cache as a shared pool of fixed-size
+pages (``serving/paged_cache.py``); a request's context is scattered
+over non-contiguous pages named by its block table. One query token per
+sequence attends to that scattered cache without ever materializing a
+contiguous copy: the grid is (batch, kv_head, block) and the block
+table is a *scalar-prefetch* operand, so each cell's BlockSpec
+``index_map`` resolves the logical block to its physical page and the
+DMA fetches exactly that page — the gather happens in the memory
+system, not in registers. Per-cell partials (m, l, acc) are merged by
+the same tiny XLA log-sum-exp combine as the dense flash-decode kernel
+(:mod:`.decode_attention`).
+
+Out-of-range logical blocks point at a reserved scratch page; their
+positions are masked by the per-sequence length, so their garbage
+contributes exp(-inf) = 0 to the merge.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(
+    bt_ref,  # [B, NB] int32 scalar-prefetch: logical block -> physical page
+    len_ref,  # [B] int32 scalar-prefetch: valid entries incl. current token
+    q_ref,  # [1, 1, G, D]
+    k_ref,  # [1, page, 1, D] — the physical page named by bt[b, c]
+    v_ref,
+    m_out,  # [1, 1, 1, G]
+    l_out,
+    acc_out,  # [1, 1, 1, G, D]
+    *,
+    page_size: int,
+    window: int | None,
+    scale: float,
+):
+    b = pl.program_id(0)
+    ci = pl.program_id(2)
+    cache_len = len_ref[b]
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # [G, D]
+    k = k_ref[0, :, 0].astype(jnp.float32)  # [page, D]
+    v = v_ref[0, :, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [G, page]
+    pos = ci * page_size + jax.lax.broadcasted_iota(jnp.int32, (1, page_size), 1)
+    mask = pos < cache_len
+    if window is not None:
+        mask = mask & (pos >= cache_len - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m = jnp.max(s, axis=1)  # [G]
+    p = jnp.where(mask, jnp.exp(s - m[:, None]), 0.0)
+    l = jnp.sum(p, axis=1)
+    acc = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [G, D]
+    m_out[0, 0, 0] = m
+    l_out[0, 0, 0] = l
+    acc_out[0, 0, 0] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_decode_attention(
+    q: jax.Array,  # [B, 1, H, D]
+    k_pages: jax.Array,  # [P, page, KV, D] — shared page pool
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # [B, NB] int32 physical page per logical block
+    lengths: jax.Array,  # [B] int32 valid entries incl. current token
+    *,
+    window: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Single-token attention against a paged KV cache. Returns [B,1,H,D]."""
+    B, _, H, D = q.shape
+    _, page, KV, _ = k_pages.shape
+    NB = block_tables.shape[1]
+    G = H // KV
+    scale = D**-0.5
+
+    qg = q.reshape(B, KV, G, D)
+    block_tables = block_tables.astype(jnp.int32)
+    lengths = lengths.astype(jnp.int32)
+
+    kernel = functools.partial(
+        _paged_kernel, page_size=page, window=window, scale=scale
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, NB),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, c, bt, ln: (b, h, 0, 0)),
+            pl.BlockSpec(
+                (1, page, 1, D), lambda b, h, c, bt, ln: (bt[b, c], 0, h, 0)
+            ),
+            pl.BlockSpec(
+                (1, page, 1, D), lambda b, h, c, bt, ln: (bt[b, c], 0, h, 0)
+            ),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, G), lambda b, h, c, bt, ln: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, 1, G), lambda b, h, c, bt, ln: (b, h, c, 0)),
+            pl.BlockSpec(
+                (1, 1, 1, G, D), lambda b, h, c, bt, ln: (b, h, c, 0, 0)
+            ),
+        ],
+    )
+    m, l, acc = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, KV, NB, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, KV, NB, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, KV, NB, G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(block_tables, lengths, qg, k_pages, v_pages)
+
+    # Log-sum-exp merge across logical blocks (tiny XLA reduction).
+    M = jnp.max(m, axis=2, keepdims=True)  # [B,KV,1,G]
+    w = jnp.exp(m - M)  # [B,KV,NB,G]
+    denom = jnp.sum(w * l, axis=2)  # [B,KV,G]
+    numer = jnp.sum(w[..., None] * acc, axis=2)  # [B,KV,G,D]
+    out = numer / jnp.maximum(denom[..., None], 1e-30)
+    return out.reshape(B, 1, H, D).astype(q.dtype)

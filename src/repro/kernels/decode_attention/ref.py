@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for flash-decode."""
+"""Pure-jnp oracles for flash-decode and paged flash-decode."""
 
 from __future__ import annotations
 
@@ -6,6 +6,38 @@ import jax
 import jax.numpy as jnp
 
 NEG_INF = -1e30
+
+
+def gather_pages(pages: jnp.ndarray, block_tables: jnp.ndarray) -> jnp.ndarray:
+    """Materialize a contiguous cache from a page pool.
+
+    pages: [P, page, KV, D]; block_tables: [B, NB] -> [B, NB*page, KV, D].
+    """
+    B, NB = block_tables.shape
+    _, page, KV, D = pages.shape
+    return pages[block_tables].reshape(B, NB * page, KV, D)
+
+
+def paged_decode_attention_ref(
+    q: jnp.ndarray,  # [B, 1, H, D] (model layout)
+    k_pages: jnp.ndarray,  # [P, page, KV, D]
+    v_pages: jnp.ndarray,
+    block_tables: jnp.ndarray,  # [B, NB] int32
+    lengths: jnp.ndarray,  # [B] int32, valid entries incl. current token
+    *,
+    window: int | None = None,
+) -> jnp.ndarray:
+    """Gather-then-attend oracle for the paged kernel. Returns [B,1,H,D]."""
+    B, _, H, D = q.shape
+    k = gather_pages(k_pages, block_tables)  # [B, S, KV, D]
+    v = gather_pages(v_pages, block_tables)
+    return decode_attention_ref(
+        q.transpose(0, 2, 1, 3),
+        k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3),
+        jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,)),
+        window=window,
+    ).transpose(0, 2, 1, 3)
 
 
 def decode_attention_ref(

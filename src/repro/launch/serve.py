@@ -33,6 +33,14 @@ def main() -> None:
                     help="continuous-batching slots per (group, replica)")
     ap.add_argument("--max-queue", type=int, default=None,
                     help="pending-queue bound (backpressure); None = unbounded")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache: per-replica page pool + block tables "
+                         "instead of a dense max_batch x max_len reservation")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV entries per page (paged mode)")
+    ap.add_argument("--max-pages", type=int, default=None,
+                    help="pool pages per (group, replica); default matches the "
+                         "dense reservation (max_batch * ceil(max_len/page_size))")
     ap.add_argument("--arrival-p", type=float, default=0.5)
     ap.add_argument("--harvest", type=float, nargs=2, default=(6.0, 10.0))
     ap.add_argument("--seed", type=int, default=0)
@@ -53,16 +61,24 @@ def main() -> None:
         max_len=128,
         max_batch=args.max_batch,
         max_queue=args.max_queue,
+        paged=args.paged,
+        page_size=args.page_size,
+        max_pages=args.max_pages,
         seed=args.seed,
     )
     stats = server.run(args.slots, arrival_p=args.arrival_p)
+    paged_info = (
+        f" preempted={stats.preempted_jobs} peak_active={stats.peak_active}"
+        if args.paged
+        else ""
+    )
     print(
         f"policy={args.policy}: submitted={stats.submitted} "
         f"completed={stats.completed_jobs} dropped={stats.dropped_jobs} "
         f"queued={stats.queued_jobs} tokens={stats.tokens_generated} "
         f"decode_calls={stats.decode_calls} "
         f"downtime={stats.downtime_fraction:.3f} "
-        f"rerouted={stats.rerouted_stages}"
+        f"rerouted={stats.rerouted_stages}" + paged_info
     )
 
 

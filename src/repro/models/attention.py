@@ -23,6 +23,7 @@ from .layers import apply_rope, rmsnorm
 __all__ = [
     "attn_template",
     "attention_block",
+    "paged_attention_block",
     "cross_attention_block",
     "project_kv",
     "chunked_attention",
@@ -347,3 +348,52 @@ def attention_block(
         )
     o = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dtype))
     return o, (k_cache, v_cache)
+
+
+def paged_attention_block(
+    x: jax.Array,
+    p: dict,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,  # [B, 1] per-request absolute position (>= 0)
+    k_pages: jax.Array,  # [P+1, page, KV, Dh] shared pool (one layer)
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # [B, NB] int32
+    write_pages: jax.Array,  # [B] physical page for this token's K/V
+    write_offs: jax.Array,  # [B] offset within that page
+):
+    """Single-token attention sub-block against a paged KV pool.
+
+    The batch dimension is the engine's slot width: every request has
+    its own context length (``positions``) and block table. The new
+    token's K/V land at (write_pages, write_offs), precomputed by
+    :func:`repro.models.transformer.decode_step_paged` (layer-invariant;
+    masked lanes point at the pool's scratch page so a batched scatter
+    never corrupts a live page). Returns (out [B,1,D], (k_pages,
+    v_pages)).
+    """
+    dtype = cfg.compute_dtype
+    q, k, v = _project_qkv(x, p, cfg, positions)
+    k_pages = k_pages.at[write_pages, write_offs].set(k[:, 0].astype(k_pages.dtype))
+    v_pages = v_pages.at[write_pages, write_offs].set(v[:, 0].astype(v_pages.dtype))
+    attn_len = positions[:, 0] + 1  # valid entries incl. the new token
+    if cfg.attn_impl == "pallas":
+        from ..kernels.decode_attention import paged_decode_attention
+
+        out = paged_decode_attention(
+            q, k_pages, v_pages, block_tables, attn_len,
+            interpret=_use_interpret(),
+        )
+    else:
+        # XLA path: gather the pages, then the dense decode oracle with
+        # per-request lengths ([B,1] broadcasts against the position row).
+        from ..kernels.decode_attention import gather_pages
+
+        k_cache = gather_pages(k_pages, block_tables)
+        v_cache = gather_pages(v_pages, block_tables)
+        out = decode_attention(
+            q, k_cache, v_cache, attn_len[:, None],
+            mulsum=cfg.decode_mulsum, kv_stream=cfg.attn_kv_stream,
+        )
+    o = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dtype))
+    return o, (k_pages, v_pages)

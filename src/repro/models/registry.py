@@ -12,6 +12,13 @@ leading *slot* axis and the whole stack advances in one call via
 independent — per-slot context lengths live in the stacked ``cache["len"]``
 vector — so the batched step is numerically the per-request step, just
 dispatched once for the whole resident batch.
+
+``decode_paged`` is the paged-serving alternative to ``decode_batch``:
+the replica's full-attention KV lives in one shared page pool and every
+slot addresses it through a block table, so the step is natively batched
+(vmap cannot thread a shared mutable pool through independent lanes).
+``None`` for families the pager does not cover (encdec, SSM, hybrid,
+sliding-window) — :func:`repro.models.transformer.supports_paged`.
 """
 
 from __future__ import annotations
@@ -37,6 +44,8 @@ class Model:
     cache_shapes: Callable  # (batch, max_len, [enc_len]) -> SDS tree
     prefill_batch: Callable  # (params, batch [N,1,...], max_len) -> stacked
     decode_batch: Callable  # (params, token [N,1,1(,D)], caches [N,...]) -> stacked
+    decode_paged: Callable | None = None  # (params, token [W,1(,D)], pools,
+    #   lengths [W] (-1 = masked lane), block_tables [W,NB])
 
     @property
     def name(self) -> str:
@@ -76,6 +85,11 @@ def build_model(cfg: ModelConfig) -> Model:
     prefill = lambda p, b, max_len: transformer.prefill(p, b, cfg, max_len=max_len)
     decode = lambda p, t, c: transformer.decode_step(p, t, c, cfg)
     prefill_batch, decode_batch = _batched_entry_points(prefill, decode)
+    decode_paged = None
+    if transformer.supports_paged(cfg):
+        decode_paged = lambda p, t, pools, lens, bt: (
+            transformer.decode_step_paged(p, t, pools, lens, bt, cfg)
+        )
     return Model(
         cfg=cfg,
         template=transformer.lm_template(cfg),
@@ -87,4 +101,5 @@ def build_model(cfg: ModelConfig) -> Model:
         ),
         prefill_batch=prefill_batch,
         decode_batch=decode_batch,
+        decode_paged=decode_paged,
     )

@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from ..distributed.sharding import logical
-from .attention import attention_block, attn_template
+from .attention import attention_block, attn_template, paged_attention_block
 from .common import ModelConfig, ParamSpec
 from .layers import (
     embed_template,
@@ -45,6 +45,8 @@ __all__ = [
     "forward",
     "prefill",
     "decode_step",
+    "decode_step_paged",
+    "supports_paged",
     "init_cache_shapes",
     "cache_logical_axes",
     "layer_plan",
@@ -489,3 +491,77 @@ def decode_step(params, token, cache, cfg: ModelConfig):
             lambda *xs: jnp.concatenate(xs, axis=0), *updated[i]
         )
     return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Paged decode
+# ---------------------------------------------------------------------------
+
+def supports_paged(cfg: ModelConfig) -> bool:
+    """Paged serving pages the *unbounded* full-attention KV. It covers
+    every pure-attention architecture (dense, GQA, MoE, VLM backbone)
+    whose layers all attend globally; sliding-window ring buffers and
+    SSM states are already O(window)/O(1) and keep the dense slot
+    layout, so hybrid/mamba archs serve dense."""
+    if cfg.is_encdec or cfg.block != "attn":
+        return False
+    plan = layer_plan(cfg)
+    return len(plan.classes) == 1 and plan.classes[0].window is None
+
+
+def decode_step_paged(
+    params,
+    token,
+    pools: dict,
+    lengths,
+    block_tables,
+    cfg: ModelConfig,
+):
+    """One decode step for a whole slot batch against a shared page pool.
+
+    Unlike :func:`decode_step` (per-request cache, vmapped by the
+    engine), the paged step is natively batched: the W requests share
+    the replica's page pool and cannot be vmapped over it (each lane
+    scatters into the common arrays). Per-request state is ``lengths``
+    [W] (tokens already in context; ``-1`` marks a masked lane, which
+    reads/writes only the scratch page) and ``block_tables`` [W, NB] —
+    write coordinates are derived in-graph.
+
+    token: [W, 1] ids (stage 0) or hidden [W, 1, D] (later stages);
+    pools: {"k": [n_layers, P+1, page, KV, Dh], "v": ...}.
+    Returns (logits/hidden [W, 1, V|D], updated pools).
+    """
+    if not supports_paged(cfg):
+        raise ValueError(f"{cfg.name}: paged decode needs uniform full attention")
+    x = _embed(params, token, cfg)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    active = lengths >= 0
+    pos = jnp.maximum(lengths, 0)
+    positions = pos[:, None]  # [W, 1]
+    # Write coordinates are layer-invariant: derive them once here, not
+    # inside the layer scan. Masked lanes go to the scratch page.
+    W = pos.shape[0]
+    page = pools["k"].shape[2]
+    scratch = pools["k"].shape[1] - 1
+    write_pages = jnp.where(
+        active, block_tables[jnp.arange(W), pos // page], scratch
+    )
+    write_offs = pos % page
+    p_run = params["classes"]["c0"]
+
+    def body(x, scanned):
+        p_layer, kp, vp = scanned
+        h = rmsnorm(x, p_layer["ln1"], cfg.rms_eps)
+        a, (kp, vp) = paged_attention_block(
+            h, p_layer["attn"], cfg,
+            positions=positions, k_pages=kp, v_pages=vp,
+            block_tables=block_tables,
+            write_pages=write_pages, write_offs=write_offs,
+        )
+        x = x + a
+        h2 = rmsnorm(x, p_layer["ln2"], cfg.rms_eps)
+        ff, _ = _ffn(h2, p_layer, cfg)
+        return x + ff, (kp, vp)
+
+    x, (kp, vp) = jax.lax.scan(body, x, (p_run, pools["k"], pools["v"]))
+    return _unembed(params, x, cfg), {"k": kp, "v": vp}

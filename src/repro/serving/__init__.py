@@ -1,5 +1,6 @@
 from .budget import ReplicaBudget
 from .engine import PipelineServer, Request, ServerStats
+from .paged_cache import PageError, PagePool
 from .partition import partition_model, slice_stage_params, stage_configs
 from .router import RouteError, Router
 
@@ -8,6 +9,8 @@ __all__ = [
     "PipelineServer",
     "Request",
     "ServerStats",
+    "PageError",
+    "PagePool",
     "partition_model",
     "slice_stage_params",
     "stage_configs",

@@ -31,6 +31,20 @@ each token passes stages 0..G-1. A stage call occupies its replica for
 cost, now amortized over every request in the batch. Call results
 (tokens / hidden handoffs) are committed when the call completes, so an
 aborted call (replica death mid-call) never corrupts request state.
+
+Paged KV cache (``paged=True``)
+-------------------------------
+The dense layout above reserves ``max_batch x max_len`` KV entries per
+replica — worst-case memory for every slot. In paged mode each replica
+instead owns a shared pool of fixed-size pages
+(:mod:`.paged_cache`): a request holds ``ceil(context/page_size)``
+pages per group, named by its block table, and ``decode_paged`` (one
+natively-batched call, Pallas block-table gather on TPU) reads the
+scattered cache directly. Admission checks free *pages*, the router
+weighs replicas by free pages, failover re-allocates pages on the
+sibling, and page exhaustion mid-decode preempts the youngest resident
+back to the pending queue (prompt + generated tokens re-prefill on
+re-admission, so preemption is loss-free) instead of crashing.
 """
 
 from __future__ import annotations
@@ -46,6 +60,7 @@ import numpy as np
 from ..core.power import PowerModePolicy, dynamic_policy
 from ..models.registry import Model
 from .budget import ReplicaBudget
+from .paged_cache import PagePool
 from .partition import partition_model
 from .router import RouteError, Router
 
@@ -62,6 +77,7 @@ class Request:
     replicas: list[int] | None = None  # designated replica per group
     slot_ids: list[int] | None = None  # batch slot per group
     cache_ready: list[bool] | None = None  # per-group: slot cache prefilled
+    pages: list[list[int]] | None = None  # per-group physical pages (paged mode)
     generated: list[int] = dataclasses.field(default_factory=list)
     hidden: Any = None  # inter-stage activation
     in_call: bool = False  # member of the current stage call
@@ -96,6 +112,8 @@ class ServerStats:
     prefill_calls: int = 0  # batched JAX dispatches (prefill)
     decode_calls: int = 0  # batched JAX dispatches (decode)
     rerouted_stages: int = 0
+    preempted_jobs: int = 0  # paged: evicted on page exhaustion, requeued
+    peak_active: int = 0  # max concurrently resident requests
     slots: int = 0
     downtime_replica_slots: int = 0  # whole (replica, slot) pairs down
     n_groups: int = 1
@@ -122,6 +140,9 @@ class PipelineServer:
         max_len: int = 256,
         max_batch: int = 4,
         max_queue: int | None = None,
+        paged: bool = False,
+        page_size: int = 16,
+        max_pages: int | None = None,
         seed: int = 0,
     ):
         self.cfg = model.cfg
@@ -130,6 +151,21 @@ class PipelineServer:
         self.max_len = max_len
         self.max_batch = max_batch
         self.max_queue = max_queue
+        self.paged = paged
+        self.page_size = page_size
+        # Block-table width: max context per request, in pages.
+        self._nb_max = -(-max_len // page_size)
+        # Default pool = dense capacity (max_batch full-length contexts);
+        # the paged win comes from setting max_pages *below* this while
+        # raising max_batch — short requests then pack the same memory.
+        self.max_pages = (
+            max_pages if max_pages is not None else max_batch * self._nb_max
+        )
+        if paged and any(m.decode_paged is None for m, _ in self.stages):
+            raise ValueError(
+                f"{model.cfg.name}: paged serving needs uniform full "
+                "attention (see repro.models.transformer.supports_paged)"
+            )
         self.pm_policy = pm_policy or dynamic_policy(100)
         # Independent RNG streams: harvest/arrival draws and routing draws
         # must not be correlated (same-integer seeding would lockstep them).
@@ -158,13 +194,41 @@ class PipelineServer:
             for g in range(n_groups)
             for r in range(n_replicas)
         }
-        self._caches = {
-            (g, r): self._init_cache(g)
-            for g in range(n_groups)
-            for r in range(n_replicas)
-        }
+        if paged:
+            self._pools = {
+                (g, r): PagePool(self.max_pages, page_size)
+                for g in range(n_groups)
+                for r in range(n_replicas)
+            }
+            self._lens = {
+                (g, r): np.zeros(max_batch, np.int64)
+                for g in range(n_groups)
+                for r in range(n_replicas)
+            }
+            self._caches = {
+                (g, r): self._init_paged_cache(g)
+                for g in range(n_groups)
+                for r in range(n_replicas)
+            }
+            # Host block tables (+ lazily refreshed device copies): rows
+            # change only on page alloc/free, not per decode call.
+            self._bt = {
+                (g, r): np.full(
+                    (max_batch, self._nb_max), self.max_pages, np.int32
+                )
+                for g in range(n_groups)
+                for r in range(n_replicas)
+            }
+            self._bt_dev: dict[tuple[int, int], Any] = {}
+            self._fns = [self._build_paged_fns(g) for g in range(n_groups)]
+        else:
+            self._caches = {
+                (g, r): self._init_cache(g)
+                for g in range(n_groups)
+                for r in range(n_replicas)
+            }
+            self._fns = [self._build_stage_fns(g) for g in range(n_groups)]
         self._calls: dict[tuple[int, int], _StageCall] = {}
-        self._fns = [self._build_stage_fns(g) for g in range(n_groups)]
 
     # ------------------------------------------------------------------
     # Batched cache plumbing
@@ -209,6 +273,66 @@ class PipelineServer:
 
         return prefill_into, decode_masked
 
+    # ------------------------------------------------------------------
+    # Paged cache plumbing
+    # ------------------------------------------------------------------
+    def _init_paged_cache(self, g: int):
+        """Shared page pool for stage g: [n_layers, P+1, page, KV, Dh]
+        (page index P is the scratch page for masked lanes)."""
+        c = self.stages[g][0].cfg
+        shape = (
+            c.n_layers, self.max_pages + 1, self.page_size,
+            c.n_kv_heads, c.head_dim,
+        )
+        return {
+            "k": jnp.zeros(shape, c.compute_dtype),
+            "v": jnp.zeros(shape, c.compute_dtype),
+        }
+
+    def _build_paged_fns(self, g: int):
+        """Jitted paged stage entry points: prefill-and-scatter (dense
+        prefill compute, then one scatter writes the K/V into the
+        request's pages) and the natively-batched paged decode."""
+        model_g, _ = self.stages[g]
+        ps = self.page_size
+
+        @jax.jit
+        def prefill_pages(params, batch, kp, vp, page_ids):
+            # batch leaves: [N, 1, S(, D)]; page_ids: [N, NBs] with
+            # NBs * ps >= S. The transient dense cache is per-call only.
+            N, NBs = page_ids.shape
+            out, cache = model_g.prefill_batch(params, batch, NBs * ps)
+            flat = page_ids.reshape(-1)
+
+            def scatter(pool, leaf):
+                # leaf: [N, n_layers, 1, NBs*ps, KV, Dh] -> page blocks
+                n = leaf.shape[1]
+                x = leaf[:, :, 0].reshape(N, n, NBs, ps, *leaf.shape[4:])
+                x = x.transpose(1, 0, 2, 3, 4, 5).reshape(
+                    n, N * NBs, ps, *leaf.shape[4:]
+                )
+                return pool.at[:, flat].set(x.astype(pool.dtype))
+
+            kp = scatter(kp, cache["c0"]["k"])
+            vp = scatter(vp, cache["c0"]["v"])
+            return out, kp, vp
+
+        decode_paged = jax.jit(model_g.decode_paged)
+        return prefill_pages, decode_paged
+
+    def _free_pages(self, g: int, r: int, req: Request) -> None:
+        if not self.paged or req.pages is None:
+            return
+        if req.pages[g]:
+            self._pools[(g, r)].free(req.pages[g], req.rid)
+            req.pages[g] = []
+
+    def _bt_set_row(self, g: int, r: int, slot: int, pages: list[int]) -> None:
+        row = self._bt[(g, r)][slot]
+        row[:] = self.max_pages  # scratch
+        row[: len(pages)] = pages
+        self._bt_dev.pop((g, r), None)
+
     def _alloc_slot(self, g: int, r: int, rid: int) -> int:
         table = self._slot_map[(g, r)]
         idx = table.index(None)
@@ -220,8 +344,24 @@ class PipelineServer:
         slot = req.slot_ids[g]
         if slot is not None and table[slot] == req.rid:
             table[slot] = None
+            if self.paged:
+                # Freed lanes must never alias live pages: scratch the row.
+                self._bt_set_row(g, r, slot, [])
+                self._lens[(g, r)][slot] = 0
 
     def _free_counts(self) -> list[list[int]]:
+        """Router capacity weights: free batch slots (dense) or free
+        pages (paged; a replica with no free slot is full either way)."""
+        if self.paged:
+            return [
+                [
+                    0
+                    if self._slot_map[(g, r)].count(None) == 0
+                    else self._pools[(g, r)].free_pages
+                    for r in range(self.R)
+                ]
+                for g in range(self.G)
+            ]
         return [
             [self._slot_map[(g, r)].count(None) for r in range(self.R)]
             for g in range(self.G)
@@ -238,12 +378,28 @@ class PipelineServer:
             rid=self._next_rid, prompt=np.asarray(tokens), n_tokens=n_tokens
         )
         self._next_rid += 1
+        final_ctx = len(req.prompt) + n_tokens
+        if final_ctx > self.max_len or (
+            self.paged and -(-final_ctx // self.page_size) > self.max_pages
+        ):
+            # The final context cannot fit a slot's cache / block-table
+            # row / page pool, so the request can never complete: reject
+            # up front rather than corrupt the cache tail, overflow the
+            # table mid-decode, park an unadmittable request at the
+            # queue head forever, or preempt healthy residents while
+            # growing toward an inevitable drop.
+            req.dropped = True
+            self.stats.dropped_jobs += 1
+            return None
         if any(not any(b.alive for b in group) for group in self.budgets):
             # A whole group is dead: nothing to wait for.
             req.dropped = True
             self.stats.dropped_jobs += 1
             return None
-        if self._try_admit(req):
+        # FIFO fairness: a new arrival never jumps requests already
+        # waiting in the queue (capacity freed since the last drain goes
+        # to the queue head on the next step, not to the newest submit).
+        if not self._pending and self._try_admit(req):
             return req
         if self.max_queue is not None and len(self._pending) >= self.max_queue:
             req.dropped = True
@@ -259,18 +415,43 @@ class PipelineServer:
             replicas = self.router.route(self.budgets, free_slots=self._free_counts())
         except RouteError:
             return False
+        if self.paged:
+            # Reserve the full current context up front — prompt plus any
+            # tokens already generated (a preempted request re-admits with
+            # its whole prefix to re-prefill) — so admissions within a
+            # slot see each other's claims and an under-reserved re-admit
+            # cannot immediately preempt healthy residents. Decode growth
+            # still allocates lazily (see _ensure_pages).
+            blocks = self._pools[(0, replicas[0])].blocks_for(
+                len(req.prompt) + len(req.generated)
+            )
+            pools = [self._pools[(g, replicas[g])] for g in range(self.G)]
+            if any(not p.can_alloc(blocks) for p in pools):
+                return False
+            req.pages = [p.alloc(blocks, req.rid) for p in pools]
         req.replicas = replicas
         req.slot_ids = [self._alloc_slot(g, replicas[g], req.rid) for g in range(self.G)]
+        if self.paged:
+            for g in range(self.G):
+                self._bt_set_row(g, replicas[g], req.slot_ids[g], req.pages[g])
         req.cache_ready = [False] * self.G
         req.queued = False
         self._active.append(req)
+        self.stats.peak_active = max(self.stats.peak_active, len(self._active))
         return True
 
     # ------------------------------------------------------------------
     # Batched stage execution
     # ------------------------------------------------------------------
-    def _start_call(self, g: int, r: int, members: list[Request]) -> _StageCall:
-        """Issue the batched JAX work for every member and open the call."""
+    def _start_call(self, g: int, r: int, members: list[Request]) -> _StageCall | None:
+        """Issue the batched JAX work for every member and open the call.
+        Paged mode may defer members (page exhaustion) and returns None
+        when nothing could be served this slot."""
+        if self.paged:
+            return self._start_call_paged(g, r, members)
+        return self._start_call_dense(g, r, members)
+
+    def _start_call_dense(self, g: int, r: int, members: list[Request]) -> _StageCall:
         _, params_g = self.stages[g]
         b = self.budgets[g][r]
         pm = b.pm
@@ -363,6 +544,213 @@ class PipelineServer:
             members=list(members), outputs=outputs, pm=pm, slots_left=kappa
         )
 
+    # ------------------------------------------------------------------
+    # Paged stage execution
+    # ------------------------------------------------------------------
+    def _youngest_preemptable(
+        self, g: int, r: int, protected: set[int]
+    ) -> Request | None:
+        """Newest resident holding pages on (g, r) that can be evicted:
+        not mid-call anywhere, not already part of the call being built."""
+        victims = [
+            req
+            for req in self._active
+            if req.rid not in protected
+            and not req.in_call
+            and req.replicas[g] == r
+            and req.pages[g]
+        ]
+        return max(victims, key=lambda q: q.rid, default=None)
+
+    def _preempt(self, victim: Request) -> None:
+        """Evict a resident fleet-wide and requeue it. Its prompt and
+        generated tokens are intact, so re-admission re-prefills the
+        exact context at stage 0 — preemption loses work, not tokens."""
+        for g in range(self.G):
+            self._free_slot(g, victim.replicas[g], victim)
+            self._free_pages(g, victim.replicas[g], victim)
+        self._active.remove(victim)
+        victim.replicas = None
+        victim.slot_ids = None
+        victim.cache_ready = None
+        victim.pages = None
+        victim.stage = 0
+        victim.hidden = None
+        victim.queued = True
+        self._pending.append(victim)
+        self.stats.preempted_jobs += 1
+
+    def _ensure_pages(
+        self, g: int, r: int, req: Request, need_len: int, protected: set[int]
+    ) -> bool:
+        """Grow ``req``'s page list on (g, r) to cover ``need_len``
+        entries, preempting the youngest resident on exhaustion. False =
+        defer this member to a later slot (no preemptable victim now)."""
+        pool = self._pools[(g, r)]
+        need = pool.blocks_for(need_len)
+        if need > pool.n_pages:
+            # Can never fit, even with the pool to itself: drop.
+            for gg in range(self.G):
+                self._free_slot(gg, req.replicas[gg], req)
+                self._free_pages(gg, req.replicas[gg], req)
+            self._active.remove(req)
+            req.dropped = True
+            self.stats.dropped_jobs += 1
+            return False
+        grown = False
+        while len(req.pages[g]) < need:
+            if pool.can_alloc(1):
+                req.pages[g].extend(pool.alloc(1, req.rid))
+                grown = True
+                continue
+            victim = self._youngest_preemptable(g, r, protected)
+            if victim is None:
+                return False
+            self._preempt(victim)
+        if grown:
+            self._bt_set_row(g, r, req.slot_ids[g], req.pages[g])
+        return True
+
+    def _start_call_paged(
+        self, g: int, r: int, members: list[Request]
+    ) -> _StageCall | None:
+        _, params_g = self.stages[g]
+        b = self.budgets[g][r]
+        pm = b.pm
+        prefill_pages, decode_fn = self._fns[g]
+        pool = self._pools[(g, r)]
+        lens_host = self._lens[(g, r)]
+        cache = self._caches[(g, r)]
+        last = g == self.G - 1
+        key = "tokens" if g == 0 else "hidden"
+
+        # Build prefill inputs first (their length drives page demand),
+        # then secure pages oldest-first; members that cannot get pages
+        # this slot are deferred, and _ensure_pages may preempt younger
+        # members — skip those when reached (queued/dropped flips).
+        pre_inp: dict[int, Any] = {}
+        for m in members:
+            if m.cache_ready[g]:
+                continue
+            if g == 0:
+                ids = np.asarray(m.prompt, np.int32)
+                if m.generated:
+                    # Failover/preemption re-prefill: full prefix from the
+                    # immutable prompt + every generated token (see the
+                    # dense path for why this keeps decoding token-exact).
+                    ids = np.concatenate([ids, np.asarray(m.generated, np.int32)])
+                pre_inp[m.rid] = jnp.asarray(ids)[None, :]
+            else:
+                # Paged decode hand-offs are [1, D] (see below); prefill
+                # inputs are [1, S, D].
+                pre_inp[m.rid] = (
+                    m.hidden if m.hidden.ndim == 3 else m.hidden[:, None]
+                )
+        served: list[Request] = []
+        protected: set[int] = set()
+        for m in sorted(members, key=lambda q: q.rid):
+            if m.queued or m.dropped:
+                continue  # preempted/dropped by an earlier member's ensure
+            if m.cache_ready[g]:
+                need = int(lens_host[m.slot_ids[g]]) + 1
+            else:
+                need = int(pre_inp[m.rid].shape[1])
+            if self._ensure_pages(g, r, m, need, protected | {m.rid}):
+                served.append(m)
+                protected.add(m.rid)
+        if not served:
+            return None
+
+        outputs: list[Any] = [None] * len(served)
+        pre = [i for i, m in enumerate(served) if not m.cache_ready[g]]
+        dec = [i for i, m in enumerate(served) if m.cache_ready[g]]
+
+        # Prefills, grouped by prompt/handoff length (one dispatch each);
+        # the scatter lands each request's K/V in its own pages.
+        by_len: dict[int, list[int]] = {}
+        for i in pre:
+            by_len.setdefault(int(pre_inp[served[i].rid].shape[1]), []).append(i)
+        for length, idxs in sorted(by_len.items()):
+            stacked = jnp.stack([pre_inp[served[i].rid] for i in idxs])
+            nbs = pool.blocks_for(length)
+            page_ids = np.asarray(
+                [served[i].pages[g][:nbs] for i in idxs], np.int32
+            )
+            out, kp, vp = prefill_pages(
+                params_g, {key: stacked}, cache["k"], cache["v"],
+                jnp.asarray(page_ids),
+            )
+            cache = {"k": kp, "v": vp}
+            self.stats.prefill_calls += 1
+            for i in idxs:
+                lens_host[served[i].slot_ids[g]] = length
+            if last:
+                toks = np.asarray(jnp.argmax(out[:, 0, -1], axis=-1))
+                for j, i in enumerate(idxs):
+                    outputs[i] = int(toks[j])
+            else:
+                for j, i in enumerate(idxs):
+                    outputs[i] = out[j]
+
+        # Decode: one natively-batched paged dispatch over the slot
+        # width. Lanes marked -1 write to the scratch page and attend
+        # one masked position; their outputs are never read. The device
+        # block table is cached and refreshed only on page alloc/free.
+        if dec:
+            W = self.max_batch
+            lens_arr = np.full((W,), -1, np.int32)
+            for i in dec:
+                s = served[i].slot_ids[g]
+                lens_arr[s] = lens_host[s]
+            if (g, r) not in self._bt_dev:
+                self._bt_dev[(g, r)] = jnp.asarray(self._bt[(g, r)])
+            if g == 0:
+                buf = np.zeros((W, 1), np.int32)
+                for i in dec:
+                    buf[served[i].slot_ids[g], 0] = served[i].generated[-1]
+                inp = jnp.asarray(buf)
+            else:
+                slots = np.asarray([served[i].slot_ids[g] for i in dec], np.int32)
+                # Hand-offs: [1, D] from an upstream decode, [1, S, D]
+                # after an upstream re-prefill (consume the last position).
+                hs = jnp.stack(
+                    [
+                        m.hidden if m.hidden.ndim == 2 else m.hidden[:, -1]
+                        for m in (served[i] for i in dec)
+                    ]
+                )  # [N, 1, D]
+                inp = (
+                    jnp.zeros((W, 1, self.cfg.d_model), hs.dtype)
+                    .at[jnp.asarray(slots)]
+                    .set(hs)
+                )
+            out, cache = decode_fn(
+                params_g, inp, {"k": cache["k"], "v": cache["v"]},
+                jnp.asarray(lens_arr), self._bt_dev[(g, r)],
+            )
+            self.stats.decode_calls += 1
+            for i in dec:
+                lens_host[served[i].slot_ids[g]] += 1
+            if last:
+                toks = np.asarray(jnp.argmax(out[:, 0], axis=-1))
+                for i in dec:
+                    outputs[i] = int(toks[served[i].slot_ids[g]])
+            else:
+                # Hand-offs stay [1, D] (not dense's [1, 1, D]): the
+                # per-member [None] here costs one eagerly-dispatched
+                # expand_dims per request per stage round, which measured
+                # as a whole-percent tokens/s hit; both consumers branch
+                # on ndim instead.
+                for i in dec:
+                    outputs[i] = out[served[i].slot_ids[g]]  # [1, D]
+
+        self._caches[(g, r)] = cache
+        self.stats.stage_executions += len(served)
+        for m in served:
+            m.in_call = True
+        kappa = self.pm_policy.mode(pm).kappa
+        return _StageCall(members=served, outputs=outputs, pm=pm, slots_left=kappa)
+
     def _commit(self, req: Request, out: Any, g: int) -> None:
         """Apply a completed stage call's result to the request."""
         req.in_call = False
@@ -389,7 +777,28 @@ class PipelineServer:
                 if not b.available:
                     self.stats.downtime_replica_slots += 1
 
-        # 2) backpressure queue: admit while capacity allows (FIFO); a
+        # 2) abort calls on dead replicas; reroute their members
+        for (g, r), call in list(self._calls.items()):
+            if not self.budgets[g][r].alive:
+                del self._calls[(g, r)]
+                for m in call.members:
+                    m.in_call = False
+                    self._reroute_or_drop(m)
+
+        # 3) re-place idle requests whose current-stage replica died, and
+        #    parked ones (slotless after a failed failover — their old
+        #    replica may have recovered or a sibling freed up). Runs
+        #    BEFORE queue admission: in-flight work already holds slots
+        #    and pages on its other groups, so freed capacity goes to it
+        #    first — fresh admissions must not starve a parked request.
+        for req in list(self._active):
+            if req.in_call:
+                continue
+            g = req.stage
+            if not self.budgets[g][req.replicas[g]].alive or req.slot_ids[g] is None:
+                self._reroute_or_drop(req)
+
+        # 4) backpressure queue: admit while capacity allows (FIFO); a
         #    fully dead group means queued requests have nothing to wait
         #    for (mirrors the submit-time drop)
         if self._pending and any(
@@ -403,19 +812,6 @@ class PipelineServer:
         while self._pending and self._try_admit(self._pending[0]):
             self._pending.popleft()
 
-        # 3) abort calls on dead replicas; reroute their members
-        for (g, r), call in list(self._calls.items()):
-            if not self.budgets[g][r].alive:
-                del self._calls[(g, r)]
-                for m in call.members:
-                    m.in_call = False
-                    self._reroute_or_drop(m)
-
-        # 4) reroute idle requests whose current-stage replica died
-        for req in list(self._active):
-            if not req.in_call and not self.budgets[req.stage][req.replicas[req.stage]].alive:
-                self._reroute_or_drop(req)
-
         # 5) start one batched call per idle, energy-ready replica
         for g in range(self.G):
             for r in range(self.R):
@@ -427,10 +823,15 @@ class PipelineServer:
                 members = [
                     req
                     for req in self._active
-                    if req.stage == g and req.replicas[g] == r and not req.in_call
+                    if req.stage == g
+                    and req.replicas[g] == r
+                    and not req.in_call
+                    and req.slot_ids[g] is not None  # parked: awaiting re-place
                 ]
                 if members:
-                    self._calls[(g, r)] = self._start_call(g, r, members)
+                    call = self._start_call(g, r, members)
+                    if call is not None:  # paged: every member deferred
+                        self._calls[(g, r)] = call
 
         # 6) advance calls: charge CE(PM)/kappa per slot (device-level,
         #    amortized over the batch), commit results on completion
@@ -458,12 +859,14 @@ class PipelineServer:
         """
         g = req.stage
         self._free_slot(g, req.replicas[g], req)
+        self._free_pages(g, req.replicas[g], req)  # cache on the dead node is lost
         req.slot_ids[g] = None
         if not any(b.alive for b in self.budgets[g]):
             # The whole group is gone: nothing to fail over to.
             req.dropped = True
             for gg in range(self.G):
                 self._free_slot(gg, req.replicas[gg], req)
+                self._free_pages(gg, req.replicas[gg], req)
             self._active.remove(req)
             self.stats.dropped_jobs += 1
             return
@@ -471,8 +874,10 @@ class PipelineServer:
             new_r = self.router.reroute(self.budgets, g, free_slots=self._free_counts())
         except RouteError:
             # Live siblings exist but are momentarily full / power-saving:
-            # the request stays parked on the dead replica and the reroute
-            # is retried every slot until a sibling slot frees up.
+            # the request stays parked (slotless) and the re-place is
+            # retried every slot until a sibling slot frees up. Its old
+            # slot was released above, so the stage cache is gone.
+            req.cache_ready[g] = False
             return
         req.replicas[g] = new_r
         req.slot_ids[g] = self._alloc_slot(g, new_r, req.rid)
@@ -486,6 +891,7 @@ class PipelineServer:
                 req.done = True
                 for g in range(self.G):
                     self._free_slot(g, req.replicas[g], req)
+                    self._free_pages(g, req.replicas[g], req)
                 self._active.remove(req)
                 self.stats.completed_jobs += 1
                 return

@@ -1,0 +1,110 @@
+"""Paged KV-cache page pool: block tables, alloc/free, conservation.
+
+The dense continuous-batching cache (PR 2) reserves ``max_batch x
+max_len`` KV entries per replica, so one long-context slot prices every
+short request at worst-case memory. Paging replaces that reservation
+with a shared pool of fixed-size pages per (group, replica): a request
+holds ``ceil(context / page_size)`` pages named by its block table, the
+pool's free list is the replica's true admission capacity, and the
+router weighs replicas by free pages instead of free slots.
+
+This module is the *host-side* accounting: which physical page belongs
+to which request. The device-side pool arrays (``[n_layers, n_pages+1,
+page_size, KV, head_dim]`` — the extra page is scratch for masked
+lanes) live in the engine's per-replica cache dict and are read by
+:func:`repro.models.transformer.decode_step_paged` through the block
+tables this module hands out.
+
+Invariants (fuzz-tested in ``tests/test_paged_cache.py``):
+
+* conservation — ``free_pages + sum(allocated) == n_pages`` always;
+* exclusivity — a page has at most one owner; double-free and
+  foreign-free raise instead of corrupting the pool.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["PagePool", "PageError"]
+
+
+class PageError(RuntimeError):
+    """Pool accounting violation (double free / foreign free / overdraw)."""
+
+
+@dataclasses.dataclass
+class PagePool:
+    """Fixed-size page allocator for one replica's KV pool.
+
+    Pages are plain indices into the device pool arrays; index
+    ``n_pages`` (one past the end) is the reserved scratch page and is
+    never handed out.
+    """
+
+    n_pages: int
+    page_size: int
+
+    def __post_init__(self) -> None:
+        if self.n_pages <= 0 or self.page_size <= 0:
+            raise ValueError("need n_pages > 0 and page_size > 0")
+        # LIFO free list: lowest indices first so allocation order is
+        # deterministic (seed-reproducible serving runs).
+        self._free: list[int] = list(range(self.n_pages - 1, -1, -1))
+        self._owner: dict[int, int] = {}  # page -> rid
+
+    @property
+    def scratch(self) -> int:
+        return self.n_pages
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return len(self._owner)
+
+    def blocks_for(self, length: int) -> int:
+        """Pages needed to hold ``length`` cache entries (min 1)."""
+        return max(1, -(-int(length) // self.page_size))
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int, rid: int) -> list[int]:
+        if n > len(self._free):
+            raise PageError(
+                f"pool overdraw: want {n}, have {len(self._free)} free"
+            )
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self._owner[p] = rid
+        return pages
+
+    def free(self, pages: list[int], rid: int) -> None:
+        for p in pages:
+            owner = self._owner.get(p)
+            if owner is None:
+                raise PageError(f"double free of page {p} (rid {rid})")
+            if owner != rid:
+                raise PageError(
+                    f"foreign free of page {p}: owned by {owner}, freed by {rid}"
+                )
+            del self._owner[p]
+            self._free.append(p)
+
+    def owned_by(self, rid: int) -> list[int]:
+        return [p for p, o in self._owner.items() if o == rid]
+
+    def check_conservation(self) -> None:
+        """Raise unless free + allocated is exactly the pool, disjointly."""
+        free = set(self._free)
+        used = set(self._owner)
+        if len(free) != len(self._free):
+            raise PageError("free list contains duplicates")
+        if free & used:
+            raise PageError(f"pages both free and owned: {sorted(free & used)}")
+        if free | used != set(range(self.n_pages)):
+            missing = set(range(self.n_pages)) - (free | used)
+            raise PageError(f"pages leaked: {sorted(missing)}")

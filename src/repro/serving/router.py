@@ -4,11 +4,13 @@ fleet's request router.
 Given the per-replica budgets of each pipeline group, the router returns
 which replica serves each stage of a new request, using uniform /
 long-term / adaptive scheduling (:mod:`repro.core.policies`). With the
-continuous-batching engine the router is also queue-depth aware: callers
-pass per-replica free batch-slot counts and the routing mass shifts
-toward replicas with headroom (a replica with zero free slots gets zero
-mass), so ``PipelineServer.submit`` can backpressure into a pending
-queue instead of dropping when the fleet is momentarily full.
+continuous-batching engine the router is also capacity aware: callers
+pass per-replica headroom weights through ``free_slots`` — free batch
+slots for the dense engine, free KV-cache *pages* for the paged engine
+(``PipelineServer._free_counts``) — and the routing mass shifts toward
+replicas with headroom (zero headroom gets zero mass), so
+``PipelineServer.submit`` can backpressure into a pending queue instead
+of dropping when the fleet is momentarily full.
 """
 
 from __future__ import annotations

@@ -1,0 +1,28 @@
+"""Shared serving-test helpers (imported by test_serving / test_paged_cache)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.models import build_model, init_from_template
+
+
+def tiny_model(name="stablelm-1.6b"):
+    cfg = dataclasses.replace(
+        get_smoke_config(name), dtype="float32", param_dtype="float32"
+    )
+    model = build_model(cfg)
+    params = init_from_template(model.template, jax.random.PRNGKey(0), "float32")
+    return cfg, model, params
+
+
+def direct_greedy(model, params, prompt, n_tokens, max_len=64):
+    """Monolithic greedy decode — the token-exact reference."""
+    logits, cache = model.prefill(params, {"tokens": jnp.asarray(prompt)[None]}, max_len)
+    toks = [int(jnp.argmax(logits[0, -1]))]
+    for _ in range(n_tokens - 1):
+        logits, cache = model.decode_step(params, jnp.asarray([[toks[-1]]]), cache)
+        toks.append(int(jnp.argmax(logits[0, -1])))
+    return toks

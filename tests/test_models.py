@@ -88,6 +88,7 @@ def test_prefill_decode_matches_forward(name):
     assert int(cache2["len"]) == S
 
 
+@pytest.mark.slow
 def test_hymba_ring_buffer_consistency():
     """Decode far past the window: ring cache must equal teacher forcing."""
     cfg = fp32(get_smoke_config("hymba-1.5b"))  # window 16

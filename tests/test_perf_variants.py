@@ -64,6 +64,7 @@ def test_kv_stream_matches_baseline():
     np.testing.assert_allclose(np.asarray(lb), np.asarray(ls), rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.slow
 def test_ring_index_matches_roll():
     """Hymba ring-buffer decode far past the window, both ring impls."""
     cfg_r, model_r, params = build("hymba-1.5b")

@@ -13,6 +13,7 @@ import textwrap
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from jax.sharding import Mesh
 
 from repro.distributed.pipeline import pipeline_apply
@@ -59,6 +60,7 @@ SCRIPT = textwrap.dedent(
 )
 
 
+@pytest.mark.slow
 def test_multi_stage_matches_sequential():
     proc = subprocess.run(
         [sys.executable, "-c", SCRIPT],

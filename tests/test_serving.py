@@ -1,16 +1,13 @@
 """Serving tests: partition equivalence, router semantics, engine runs,
 failure handling."""
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import direct_greedy, tiny_model
 
-from repro.configs import get_smoke_config
 from repro.core.power import dynamic_policy, fixed_policy
-from repro.models import build_model, init_from_template
 from repro.serving import (
     PipelineServer,
     ReplicaBudget,
@@ -18,15 +15,6 @@ from repro.serving import (
     Router,
     partition_model,
 )
-
-
-def tiny_model(name="stablelm-1.6b"):
-    cfg = dataclasses.replace(
-        get_smoke_config(name), dtype="float32", param_dtype="float32"
-    )
-    model = build_model(cfg)
-    params = init_from_template(model.template, jax.random.PRNGKey(0), "float32")
-    return cfg, model, params
 
 
 class TestPartition:
@@ -71,16 +59,6 @@ class TestPartition:
         np.testing.assert_allclose(
             np.asarray(out), np.asarray(full_logits), rtol=2e-4, atol=2e-4
         )
-
-
-def direct_greedy(model, params, prompt, n_tokens, max_len=64):
-    """Monolithic greedy decode — the token-exact reference."""
-    logits, cache = model.prefill(params, {"tokens": jnp.asarray(prompt)[None]}, max_len)
-    toks = [int(jnp.argmax(logits[0, -1]))]
-    for _ in range(n_tokens - 1):
-        logits, cache = model.decode_step(params, jnp.asarray([[toks[-1]]]), cache)
-        toks.append(int(jnp.argmax(logits[0, -1])))
-    return toks
 
 
 class TestBudget:
@@ -320,6 +298,32 @@ class TestContinuousBatching:
         assert server.stats.rerouted_stages >= 1
         assert a.generated == direct_greedy(model, params, np.arange(4), 3)
 
+    def test_parked_request_resumes_on_replica_recovery(self):
+        """Regression: a failover victim parked because its live sibling
+        was full must be re-placed when its old replica recovers — the
+        engine used to pick it up as a slotless call member and crash."""
+        cfg, model, params = tiny_model()
+        server = PipelineServer(
+            model, params, n_groups=1, n_replicas=2,
+            harvest_bounds=(50.0, 60.0), max_len=64, max_batch=1, seed=8,
+        )
+        a = server.submit(np.arange(4), n_tokens=6)
+        b = server.submit(np.arange(4) + 1, n_tokens=6)
+        assert a.replicas[0] != b.replicas[0]
+        server.step()
+        dead = a.replicas[0]
+        server.fail_replica(0, dead)
+        for _ in range(3):
+            server.step()  # sibling full: a is parked, slotless
+        server.recover_replica(0, dead)
+        for _ in range(300):
+            if a.done and b.done:
+                break
+            server.step()
+        assert a.done and b.done
+        assert server.stats.dropped_jobs == 0
+        assert a.generated == direct_greedy(model, params, np.arange(4), 6)
+
     def test_dead_group_drops_queued_requests(self):
         cfg, model, params = tiny_model()
         server = PipelineServer(
@@ -338,6 +342,52 @@ class TestContinuousBatching:
         assert server.stats.dropped_jobs == 2
         stats = server.stats
         assert stats.submitted == stats.completed_jobs + stats.dropped_jobs
+
+    def test_parked_request_beats_fresh_admissions_to_freed_capacity(self):
+        """Regression: freed slots used to go to the queue head before the
+        slot-loop re-placed parked in-flight requests, so sustained
+        arrivals starved a failover victim indefinitely."""
+        cfg, model, params = tiny_model()
+        server = PipelineServer(
+            model, params, n_groups=1, n_replicas=2,
+            harvest_bounds=(50.0, 60.0), max_len=64, max_batch=1, seed=8,
+        )
+        a = server.submit(np.arange(4), n_tokens=4)
+        b = server.submit(np.arange(4) + 1, n_tokens=4)
+        assert a.replicas[0] != b.replicas[0]
+        server.step()
+        server.fail_replica(0, a.replicas[0])  # a parks: sibling is full
+        rid = 0
+        for _ in range(120):
+            if a.done:
+                break
+            # Sustained fresh traffic competing for every freed slot.
+            server.submit(np.arange(3) + rid, n_tokens=1)
+            rid += 1
+            server.step()
+        assert a.done  # the parked request reclaimed capacity first
+
+    def test_new_submit_never_jumps_the_queue(self):
+        """Regression: capacity freed between steps used to go to the
+        newest submit() instead of the FIFO head, starving queued
+        requests under sustained traffic."""
+        cfg, model, params = tiny_model()
+        server = PipelineServer(
+            model, params, n_groups=1, n_replicas=1,
+            harvest_bounds=(50.0, 60.0), max_len=64, max_batch=1, seed=6,
+        )
+        a = server.submit(np.arange(4), n_tokens=2)
+        b = server.submit(np.arange(4) + 1, n_tokens=2)
+        assert b.queued
+        while not a.done:
+            server.step()  # the slot is now free, b still queued
+        c = server.submit(np.arange(4) + 2, n_tokens=2)
+        assert c.queued and not c.done  # b holds its place at the head
+        for _ in range(200):
+            if b.done and c.done:
+                break
+            server.step()
+        assert b.done and c.done
 
     def test_queue_drains_and_completes(self):
         cfg, model, params = tiny_model()
