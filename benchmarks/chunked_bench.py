@@ -1,0 +1,172 @@
+"""Chunked-prefill benchmark: mixed prefill/decode traffic at batch 16.
+
+The edge-serving regime (EdgeShard, the Network Edge Inference survey)
+is a stream of prompts of *many different lengths* joining a batch of
+resident decodes. Whole-prompt prefill issues one vmapped dispatch per
+distinct prompt length, so every new length re-jits mid-traffic and a
+long prompt's prefill head-of-line blocks every resident's next token.
+Chunked prefill rides one fixed call shape, so the compile count is
+independent of the workload's lengths and per-step prefill work is
+bounded by the chunk.
+
+Two claims, recorded in ``BENCH_chunked.json`` for dense and paged:
+
+* **No tokens/s regression** — the same staggered mixed-length workload
+  drained through ``prefill_chunk=None`` vs ``prefill_chunk=8`` servers
+  at ``max_batch=16``; tokens/s must not drop under chunking.
+* **Improved time-to-first-decode** — mean wall-clock TTFT over the
+  workload drops because residents' decodes are never parked behind a
+  fresh prompt-length compile or an unbounded prefill.
+
+Also reported: the number of *traced prefill computations* per mode
+(via ``repro.serving.trace_counts``) — the compile-count story behind
+the wall-clock one. ``--smoke`` shrinks the workload for CI and skips
+the JSON rewrite.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.serving import PipelineServer, reset_trace_counts, trace_counts
+
+from .common import csv_row, smoke_serving_model as _model
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_chunked.json"
+
+# Mixed traffic: eight distinct prompt lengths, cycled.
+PROMPT_LENS = (4, 8, 12, 20, 28, 36, 48, 60)
+
+
+def _prefill_traces() -> tuple[int, int]:
+    """(distinct prefill shapes, total prefill traces) since last reset."""
+    keys = [
+        k for k in trace_counts()
+        if k[0] in ("prefill", "prefill_pages", "chunk", "chunk_paged")
+    ]
+    return len(keys), sum(trace_counts()[k] for k in keys)
+
+
+def mixed_traffic(
+    *,
+    paged: bool,
+    prefill_chunk: int | None,
+    n_requests: int,
+    n_tokens: int,
+    stagger: int = 2,
+) -> dict:
+    """Drain a staggered mixed-length workload; measure tokens/s + TTFT.
+
+    ``stagger`` requests are submitted every slot (after an initial
+    seed of 4), so later prompts' prefills genuinely interleave with
+    resident decodes — the head-of-line regime chunking targets.
+    """
+    cfg, model, params = _model()
+    reset_trace_counts()
+    server = PipelineServer(
+        model, params,
+        n_groups=2, n_replicas=1, policy="uniform",
+        harvest_bounds=(60.0, 80.0),  # energy-unconstrained: pure compute
+        max_len=128, max_batch=16,
+        paged=paged, page_size=16,
+        prefill_chunk=prefill_chunk, seed=0,
+    )
+    prompts = [
+        (np.arange(PROMPT_LENS[i % len(PROMPT_LENS)]) * 3 + i) % cfg.vocab_size
+        for i in range(n_requests)
+    ]
+    t0 = time.perf_counter()
+    reqs = [server.submit(p, n_tokens) for p in prompts[:4]]
+    next_i, steps = 4, 0
+    while not all(r.done for r in reqs) or next_i < n_requests:
+        for _ in range(stagger):
+            if next_i < n_requests:
+                reqs.append(server.submit(prompts[next_i], n_tokens))
+                next_i += 1
+        server.step()
+        steps += 1
+        if steps > 200 * n_requests * n_tokens:  # pragma: no cover
+            raise RuntimeError("mixed workload did not drain")
+    wall = time.perf_counter() - t0
+    ttfts = [r.ttft for r in reqs if r.ttft is not None]
+    shapes, traces = _prefill_traces()
+    tokens = server.stats.tokens_generated
+    return {
+        "tokens_per_s": round(tokens / wall, 1),
+        "wall_s": round(wall, 3),
+        "tokens": tokens,
+        "mean_ttft_s": round(float(np.mean(ttfts)), 4),
+        "p95_ttft_s": round(float(np.percentile(ttfts, 95)), 4),
+        "prefill_shapes_compiled": shapes,
+        "prefill_traces": traces,
+        "chunk_prefill_calls": server.stats.chunk_prefill_calls,
+        "prefill_calls": server.stats.prefill_calls,
+    }
+
+
+def run(smoke: bool = False) -> list[str]:
+    n_requests = 8 if smoke else 24
+    n_tokens = 4 if smoke else 12
+    chunk = 8
+    rows, report = [], {
+        "model": "stablelm-1.6b(smoke)",
+        "max_batch": 16,
+        "prompt_lens": list(PROMPT_LENS),
+        "n_requests": n_requests,
+        "n_tokens": n_tokens,
+        "prefill_chunk": chunk,
+        "smoke": smoke,
+    }
+    for mode in ("dense", "paged"):
+        paged = mode == "paged"
+        whole = mixed_traffic(
+            paged=paged, prefill_chunk=None,
+            n_requests=n_requests, n_tokens=n_tokens,
+        )
+        chunked = mixed_traffic(
+            paged=paged, prefill_chunk=chunk,
+            n_requests=n_requests, n_tokens=n_tokens,
+        )
+        ratio = chunked["tokens_per_s"] / max(whole["tokens_per_s"], 1e-9)
+        ttfd = whole["mean_ttft_s"] / max(chunked["mean_ttft_s"], 1e-9)
+        report[mode] = {
+            "whole_prompt": whole,
+            "chunked": chunked,
+            "tokens_per_s_ratio": round(ratio, 3),
+            "ttft_speedup": round(ttfd, 2),
+        }
+        rows.append(
+            csv_row(
+                f"chunked/{mode}",
+                1e6 / max(chunked["tokens_per_s"], 1e-9),
+                f"chunked={chunked['tokens_per_s']} tok/s "
+                f"whole={whole['tokens_per_s']} tok/s ratio={ratio:.3f} "
+                f"ttft {chunked['mean_ttft_s']}s vs {whole['mean_ttft_s']}s "
+                f"({ttfd:.2f}x) prefill_shapes "
+                f"{chunked['prefill_shapes_compiled']} vs "
+                f"{whole['prefill_shapes_compiled']}",
+            )
+        )
+    if not smoke:
+        BENCH_JSON.write_text(json.dumps(report, indent=2) + "\n")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="small CI run: fewer requests/tokens, no BENCH_chunked.json",
+    )
+    args = ap.parse_args()
+    for row in run(smoke=args.smoke):
+        print(row, flush=True)
+
+
+if __name__ == "__main__":
+    main()

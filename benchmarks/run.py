@@ -7,6 +7,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
   fig3   — downtime fraction vs energy/job arrivals (paper Fig. 3)
   fig4   — throughput / dropped jobs (paper Fig. 4)
   serve  — engine integration: scheduler driving real decode + failover
+  paged  — paged vs dense KV cache: capacity + throughput (BENCH_paged.json)
+  chunked — chunked vs whole-prompt prefill under mixed traffic
+            (BENCH_chunked.json)
   sweep  — per-scenario re-jit vs one vmapped sweep (writes BENCH_sweep.json)
   roofline — per-cell dry-run roofline terms (deliverable g)
 """
@@ -18,11 +21,31 @@ import traceback
 
 
 def main() -> None:
-    from . import fig2a, fig2b, fig3, fig4, roofline_table, serve_bench, sweep_bench
+    from . import (
+        chunked_bench,
+        fig2a,
+        fig2b,
+        fig3,
+        fig4,
+        paged_bench,
+        roofline_table,
+        serve_bench,
+        sweep_bench,
+    )
 
     print("name,us_per_call,derived")
     failures = 0
-    for mod in (fig2a, fig2b, fig3, fig4, serve_bench, sweep_bench, roofline_table):
+    for mod in (
+        fig2a,
+        fig2b,
+        fig3,
+        fig4,
+        serve_bench,
+        paged_bench,
+        chunked_bench,
+        sweep_bench,
+        roofline_table,
+    ):
         try:
             for row in mod.run():
                 print(row, flush=True)

@@ -73,6 +73,7 @@ def batch_sweep(
     prompt_len: int = 6,
     warmup_slots: int = 6,
     smoke: bool = False,
+    prefill_chunk: int | None = None,
 ) -> tuple[list[str], dict]:
     """Continuous-batching throughput: the same n_requests × n_tokens
     workload drained through servers of increasing ``max_batch``. One
@@ -90,6 +91,7 @@ def batch_sweep(
             harvest_bounds=(60.0, 80.0),  # energy-unconstrained: pure compute
             max_len=128,
             max_batch=mb,
+            prefill_chunk=prefill_chunk,
             seed=0,
         )
         reqs = [
@@ -133,6 +135,7 @@ def batch_sweep(
         "n_requests": n_requests,
         "n_tokens": n_tokens,
         "prompt_len": prompt_len,
+        "prefill_chunk": prefill_chunk,
         "smoke": smoke,
         "batch": report,
         f"speedup_{hi}_vs_{lo}": round(speedup, 2),
@@ -149,7 +152,7 @@ def batch_sweep(
     return rows, report_full
 
 
-def run(smoke: bool = False) -> list[str]:
+def run(smoke: bool = False, prefill_chunk: int | None = None) -> list[str]:
     rows = []
     n_slots = 20 if smoke else 60
     policies = ("uniform", "adaptive")
@@ -189,10 +192,11 @@ def run(smoke: bool = False) -> list[str]:
     # Continuous-batching throughput sweep.
     if smoke:
         batch_rows, _ = batch_sweep(
-            (1, 4, 16), n_requests=8, n_tokens=8, smoke=True
+            (1, 4, 16), n_requests=8, n_tokens=8, smoke=True,
+            prefill_chunk=prefill_chunk,
         )
     else:
-        batch_rows, _ = batch_sweep((1, 4, 16))
+        batch_rows, _ = batch_sweep((1, 4, 16), prefill_chunk=prefill_chunk)
     rows.extend(batch_rows)
     return rows
 
@@ -204,8 +208,12 @@ def main() -> None:
         action="store_true",
         help="small CI run: fewer requests/tokens, no BENCH_serve_batch.json",
     )
+    ap.add_argument(
+        "--prefill-chunk", type=int, default=None,
+        help="run the batch sweep with chunked prefill (fixed N-token chunks)",
+    )
     args = ap.parse_args()
-    for row in run(smoke=args.smoke):
+    for row in run(smoke=args.smoke, prefill_chunk=args.prefill_chunk):
         print(row, flush=True)
 
 

@@ -1,11 +1,12 @@
 from .ops import decode_attention, decode_attention_ref
 from .paged import paged_decode_attention
-from .ref import gather_pages, paged_decode_attention_ref
+from .ref import gather_pages, paged_decode_attention_ref, paged_prefill_attention
 
 __all__ = [
     "decode_attention",
     "decode_attention_ref",
     "paged_decode_attention",
     "paged_decode_attention_ref",
+    "paged_prefill_attention",
     "gather_pages",
 ]

@@ -1,7 +1,7 @@
 """Pallas TPU paged decode-attention kernel (block-table gather).
 
 Serving keeps each replica's KV cache as a shared pool of fixed-size
-pages (``serving/paged_cache.py``); a request's context is scattered
+pages (``serving/cache.py``); a request's context is scattered
 over non-contiguous pages named by its block table. One query token per
 sequence attends to that scattered cache without ever materializing a
 contiguous copy: the grid is (batch, kv_head, block) and the block

@@ -40,6 +40,43 @@ def paged_decode_attention_ref(
     ).transpose(0, 2, 1, 3)
 
 
+def paged_prefill_attention(
+    q: jnp.ndarray,  # [B, C, H, D] (model layout) — C new tokens per lane
+    k_pages: jnp.ndarray,  # [P, page, KV, D]
+    v_pages: jnp.ndarray,
+    block_tables: jnp.ndarray,  # [B, NB] int32
+    offsets: jnp.ndarray,  # [B] int32 absolute position of q[:, 0]
+) -> jnp.ndarray:
+    """Prefill-over-paged-prefix attention — the gather fallback.
+
+    Chunked prefill writes each chunk's K/V into the request's reserved
+    pages and then needs the chunk's queries to attend causally over the
+    whole paged prefix. This fallback materializes each lane's pages
+    (one gather) and runs masked attention; a Pallas kernel that walks
+    the block table directly (the multi-query sibling of
+    :func:`repro.kernels.decode_attention.paged_decode_attention`) can
+    replace it behind the same signature. Query ``i`` of lane ``b``
+    attends positions ``<= offsets[b] + i``; rows past the caller's
+    valid count produce garbage that the engine discards. Returns
+    [B, C, H, D].
+    """
+    B, C, H, D = q.shape
+    k = gather_pages(k_pages, block_tables)  # [B, S, KV, D]
+    v = gather_pages(v_pages, block_tables)
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = D**-0.5
+    qg = q.astype(jnp.float32).reshape(B, C, KV, G, D) * scale
+    s = jnp.einsum("bckgd,bskd->bckgs", qg, k.astype(jnp.float32))
+    q_pos = offsets[:, None] + jnp.arange(C, dtype=jnp.int32)  # [B, C]
+    kv_pos = jnp.arange(S, dtype=jnp.int32)
+    mask = kv_pos[None, None, :] <= q_pos[:, :, None]  # causal incl. self
+    s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bckgs,bskd->bckgd", p, v.astype(jnp.float32))
+    return out.reshape(B, C, H, D).astype(q.dtype)
+
+
 def decode_attention_ref(
     q: jnp.ndarray,  # [B, H, 1, D]
     k_cache: jnp.ndarray,  # [B, KV, S, D]

@@ -41,6 +41,11 @@ def main() -> None:
     ap.add_argument("--max-pages", type=int, default=None,
                     help="pool pages per (group, replica); default matches the "
                          "dense reservation (max_batch * ceil(max_len/page_size))")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked prefill: split joining prompts into fixed "
+                         "N-token chunks co-scheduled with decode (one compiled "
+                         "prefill shape regardless of prompt lengths, bounded "
+                         "per-step prefill work); None = whole-prompt prefill")
     ap.add_argument("--arrival-p", type=float, default=0.5)
     ap.add_argument("--harvest", type=float, nargs=2, default=(6.0, 10.0))
     ap.add_argument("--seed", type=int, default=0)
@@ -64,6 +69,7 @@ def main() -> None:
         paged=args.paged,
         page_size=args.page_size,
         max_pages=args.max_pages,
+        prefill_chunk=args.prefill_chunk,
         seed=args.seed,
     )
     stats = server.run(args.slots, arrival_p=args.arrival_p)

@@ -24,6 +24,8 @@ __all__ = [
     "attn_template",
     "attention_block",
     "paged_attention_block",
+    "chunk_attention_block",
+    "paged_chunk_attention_block",
     "cross_attention_block",
     "project_kv",
     "chunked_attention",
@@ -86,7 +88,9 @@ def chunked_attention(
 
     q: [B,Sq,H,Dh]; k, v: [B,Skv,KV,Dh]; H = G * KV (GQA).
     ``window``: dynamic sliding-window size (None/huge = full attention).
-    ``q_offset``: absolute position of q[0] (prefill continuation).
+    ``q_offset``: absolute position of q[0] (prefill continuation) — a
+    scalar, or a per-batch [B] vector when each lane continues from its
+    own offset (chunked prefill over a shared-width call).
     ``kv_stream``: slice K/V per chunk inside the scan (no stacked
     transposed copies of the whole K/V) and keep dot operands bf16 with
     fp32 accumulation — see EXPERIMENTS.md §Perf.
@@ -101,7 +105,10 @@ def chunked_attention(
     window = jnp.asarray(window, jnp.int32)
     q_offset = jnp.asarray(q_offset, jnp.int32)
 
-    q_pos = q_offset + jnp.arange(Sq, dtype=jnp.int32)
+    # [Sq] for a scalar offset, [B, Sq] for per-batch offsets.
+    q_pos = q_offset[..., None] + jnp.arange(Sq, dtype=jnp.int32)
+    if q_offset.ndim == 0:
+        q_pos = q_pos.reshape(Sq)
 
     chunk = min(chunk, Skv)
     n_chunks = -(-Skv // chunk)
@@ -129,12 +136,16 @@ def chunked_attention(
         else:
             s = jnp.einsum("bqkgd,bckd->bqkgc", qg, k_i.astype(jnp.float32))
         valid = kv_pos[None, :] < Skv  # padding mask [1, chunk]
-        delta = q_pos[:, None] - kv_pos[None, :]  # [Sq, chunk]
+        delta = q_pos[..., :, None] - kv_pos[None, :]  # [(B,) Sq, chunk]
         mask = valid
         if causal:
             mask = mask & (delta >= 0)
         mask = mask & (delta < window)
-        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        if mask.ndim == 2:
+            mask_b = mask[None, :, None, None, :]
+        else:  # per-batch q offsets
+            mask_b = mask[:, :, None, None, :]
+        s = jnp.where(mask_b, s, NEG_INF)
         m_i = jnp.max(s, axis=-1)
         m_new = jnp.maximum(m, m_i)
         p = jnp.exp(s - m_new[..., None])
@@ -395,5 +406,77 @@ def paged_attention_block(
             q, k_cache, v_cache, attn_len[:, None],
             mulsum=cfg.decode_mulsum, kv_stream=cfg.attn_kv_stream,
         )
+    o = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dtype))
+    return o, (k_pages, v_pages)
+
+
+def chunk_attention_block(
+    x: jax.Array,
+    p: dict,
+    cfg: ModelConfig,
+    *,
+    offset: jax.Array,  # scalar (vmapped lane) or [B] absolute chunk start
+    k_cache: jax.Array,  # [B, L, KV, Dh] dense per-request cache
+    v_cache: jax.Array,
+):
+    """Multi-token prefill-continuation sub-block against a dense cache.
+
+    The chunked-prefill middle ground between :func:`attention_block`'s
+    two modes: like prefill it processes ``C = x.shape[1]`` new tokens,
+    like decode it extends an existing cache. K/V for the chunk are
+    scattered at absolute positions ``offset .. offset + C - 1``
+    (out-of-bounds padding writes are dropped), then the chunk attends
+    causally over the whole cache with ``q_offset = offset`` — every
+    earlier entry is real by construction, and queries past the caller's
+    valid count produce garbage the engine discards. Returns
+    (out [B, C, D], (k_cache, v_cache)).
+    """
+    dtype = cfg.compute_dtype
+    B, C = x.shape[:2]
+    offset = jnp.asarray(offset, jnp.int32)
+    positions = offset[..., None] + jnp.arange(C, dtype=jnp.int32)  # [(B,) C]
+    q, k, v = _project_qkv(x, p, cfg, positions)
+    idx = jnp.broadcast_to(positions, (B, C))
+    rows = jnp.arange(B, dtype=jnp.int32)[:, None]
+    k_cache = k_cache.at[rows, idx].set(k.astype(k_cache.dtype), mode="drop")
+    v_cache = v_cache.at[rows, idx].set(v.astype(v_cache.dtype), mode="drop")
+    out = chunked_attention(
+        q, k_cache, v_cache, causal=True, q_offset=offset,
+        chunk=cfg.attn_chunk, kv_stream=cfg.attn_kv_stream,
+    )
+    o = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dtype))
+    return o, (k_cache, v_cache)
+
+
+def paged_chunk_attention_block(
+    x: jax.Array,
+    p: dict,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,  # [B, C] absolute position per chunk token
+    k_pages: jax.Array,  # [P+1, page, KV, Dh] shared pool (one layer)
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # [B, NB] int32
+    write_pages: jax.Array,  # [B, C] physical page per chunk token
+    write_offs: jax.Array,  # [B, C] offset within that page
+):
+    """Chunked-prefill sub-block against a paged KV pool.
+
+    The paged sibling of :func:`chunk_attention_block`: the chunk's K/V
+    are scattered into each request's reserved pages (masked lanes and
+    padding positions land on the scratch page, precomputed by
+    :func:`repro.models.transformer.prefill_chunk_paged`), then the
+    chunk attends over the paged prefix via the gather fallback in
+    :mod:`repro.kernels.decode_attention` — a Pallas
+    prefill-over-paged-prefix kernel can replace it without touching
+    this call site. Returns (out [B, C, D], (k_pages, v_pages)).
+    """
+    dtype = cfg.compute_dtype
+    q, k, v = _project_qkv(x, p, cfg, positions)
+    k_pages = k_pages.at[write_pages, write_offs].set(k.astype(k_pages.dtype))
+    v_pages = v_pages.at[write_pages, write_offs].set(v.astype(v_pages.dtype))
+    from ..kernels.decode_attention import paged_prefill_attention
+
+    out = paged_prefill_attention(q, k_pages, v_pages, block_tables, positions[:, 0])
     o = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dtype))
     return o, (k_pages, v_pages)

@@ -19,6 +19,13 @@ slot addresses it through a block table, so the step is natively batched
 (vmap cannot thread a shared mutable pool through independent lanes).
 ``None`` for families the pager does not cover (encdec, SSM, hybrid,
 sliding-window) — :func:`repro.models.transformer.supports_paged`.
+
+``prefill_chunk`` / ``prefill_chunk_batch`` / ``prefill_chunk_paged``
+are the chunked-prefill entry points (Sarathi-style): a fixed-width
+slice of a prompt advances an existing cache, so every chunk of every
+prompt shares one compiled shape and long prompts stop head-of-line
+blocking resident decodes. Same coverage as ``decode_paged`` (uniform
+full attention); ``None`` elsewhere.
 """
 
 from __future__ import annotations
@@ -46,6 +53,12 @@ class Model:
     decode_batch: Callable  # (params, token [N,1,1(,D)], caches [N,...]) -> stacked
     decode_paged: Callable | None = None  # (params, token [W,1(,D)], pools,
     #   lengths [W] (-1 = masked lane), block_tables [W,NB])
+    prefill_chunk: Callable | None = None  # (params, chunk [B,C(,D)], cache,
+    #   offset, valid) -> ([B,C,·], cache) — one request's chunk step
+    prefill_chunk_batch: Callable | None = None  # vmapped over the slot axis:
+    #   (params, chunk [N,1,C(,D)], caches [N,...], offsets [N], valids [N])
+    prefill_chunk_paged: Callable | None = None  # (params, chunk [W,C(,D)],
+    #   pools, offsets [W] (-1 = masked), valids [W], block_tables [W,NB])
 
     @property
     def name(self) -> str:
@@ -86,9 +99,24 @@ def build_model(cfg: ModelConfig) -> Model:
     decode = lambda p, t, c: transformer.decode_step(p, t, c, cfg)
     prefill_batch, decode_batch = _batched_entry_points(prefill, decode)
     decode_paged = None
+    prefill_chunk = prefill_chunk_batch = prefill_chunk_paged = None
     if transformer.supports_paged(cfg):
         decode_paged = lambda p, t, pools, lens, bt: (
             transformer.decode_step_paged(p, t, pools, lens, bt, cfg)
+        )
+        prefill_chunk = lambda p, ch, c, off, val: (
+            transformer.prefill_chunk(p, ch, c, off, val, cfg)
+        )
+
+        def prefill_chunk_batch(params, chunk, caches, offsets, valids):
+            return jax.vmap(
+                lambda ch, c, o, v: transformer.prefill_chunk(
+                    params, ch, c, o, v, cfg
+                )
+            )(chunk, caches, offsets, valids)
+
+        prefill_chunk_paged = lambda p, ch, pools, offs, vals, bt: (
+            transformer.prefill_chunk_paged(p, ch, pools, offs, vals, bt, cfg)
         )
     return Model(
         cfg=cfg,
@@ -102,4 +130,7 @@ def build_model(cfg: ModelConfig) -> Model:
         prefill_batch=prefill_batch,
         decode_batch=decode_batch,
         decode_paged=decode_paged,
+        prefill_chunk=prefill_chunk,
+        prefill_chunk_batch=prefill_chunk_batch,
+        prefill_chunk_paged=prefill_chunk_paged,
     )

@@ -28,7 +28,13 @@ import jax
 import jax.numpy as jnp
 
 from ..distributed.sharding import logical
-from .attention import attention_block, attn_template, paged_attention_block
+from .attention import (
+    attention_block,
+    attn_template,
+    chunk_attention_block,
+    paged_attention_block,
+    paged_chunk_attention_block,
+)
 from .common import ModelConfig, ParamSpec
 from .layers import (
     embed_template,
@@ -46,6 +52,8 @@ __all__ = [
     "prefill",
     "decode_step",
     "decode_step_paged",
+    "prefill_chunk",
+    "prefill_chunk_paged",
     "supports_paged",
     "init_cache_shapes",
     "cache_logical_axes",
@@ -553,6 +561,120 @@ def decode_step_paged(
         p_layer, kp, vp = scanned
         h = rmsnorm(x, p_layer["ln1"], cfg.rms_eps)
         a, (kp, vp) = paged_attention_block(
+            h, p_layer["attn"], cfg,
+            positions=positions, k_pages=kp, v_pages=vp,
+            block_tables=block_tables,
+            write_pages=write_pages, write_offs=write_offs,
+        )
+        x = x + a
+        h2 = rmsnorm(x, p_layer["ln2"], cfg.rms_eps)
+        ff, _ = _ffn(h2, p_layer, cfg)
+        return x + ff, (kp, vp)
+
+    x, (kp, vp) = jax.lax.scan(body, x, (p_run, pools["k"], pools["v"]))
+    return _unembed(params, x, cfg), {"k": kp, "v": vp}
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill
+# ---------------------------------------------------------------------------
+
+def prefill_chunk(params, chunk, cache, offset, valid, cfg: ModelConfig):
+    """Advance one request's dense cache by a fixed-width prompt chunk.
+
+    The Sarathi-style middle ground between :func:`prefill` (whole
+    prompt, one shape per length) and :func:`decode_step` (one token):
+    ``C = chunk width`` tokens join an existing cache at absolute
+    positions ``offset .. offset + C - 1``. ``valid <= C`` of them are
+    real — the padding tail's K/V writes are dropped or overwritten by
+    the next chunk, and its outputs are garbage the engine discards —
+    so every chunk of every prompt shares one compiled shape.
+
+    Uniform full-attention architectures only (the same coverage as
+    :func:`supports_paged`): ring buffers and SSM states advance
+    token-by-token and keep whole-prompt prefill.
+
+    chunk: {"tokens": [B, C]} (stage 0) or {"hidden": [B, C, D]};
+    offset, valid: int32 scalars (per-lane under the engine's vmap).
+    Returns ([B, C, V|D] per-position outputs, updated cache with
+    ``len = offset + valid``).
+    """
+    if not supports_paged(cfg):
+        raise ValueError(
+            f"{cfg.name}: chunked prefill needs uniform full attention"
+        )
+    x_in = chunk["tokens"] if cfg.stage_embed else chunk["hidden"]
+    x = _embed(params, x_in, cfg, chunk)
+    offset = jnp.asarray(offset, jnp.int32)
+    p_run = params["classes"]["c0"]
+    c0 = cache["c0"]
+
+    def body(x, scanned):
+        p_layer, k_cache, v_cache = scanned
+        h = rmsnorm(x, p_layer["ln1"], cfg.rms_eps)
+        a, (k_cache, v_cache) = chunk_attention_block(
+            h, p_layer["attn"], cfg,
+            offset=offset, k_cache=k_cache, v_cache=v_cache,
+        )
+        x = x + a
+        h2 = rmsnorm(x, p_layer["ln2"], cfg.rms_eps)
+        ff, _ = _ffn(h2, p_layer, cfg)
+        return x + ff, (k_cache, v_cache)
+
+    x, (k, v) = jax.lax.scan(body, x, (p_run, c0["k"], c0["v"]))
+    new_cache = {
+        "len": (offset + jnp.asarray(valid, jnp.int32)).astype(cache["len"].dtype),
+        "c0": {"k": k, "v": v},
+    }
+    return _unembed(params, x, cfg), new_cache
+
+
+def prefill_chunk_paged(
+    params, chunk, pools: dict, offsets, valids, block_tables, cfg: ModelConfig
+):
+    """Advance a whole slot batch's paged caches by one prompt chunk.
+
+    The paged sibling of :func:`prefill_chunk`, natively batched like
+    :func:`decode_step_paged` (the W lanes share the replica's page
+    pool): each lane's chunk K/V are scattered incrementally into its
+    reserved pages — write coordinates come from the block table, masked
+    lanes (``offsets == -1``) and padding positions (``>= valids``) land
+    on the scratch page — and the chunk attends over the paged prefix
+    through the gather fallback in :mod:`repro.kernels.decode_attention`.
+
+    chunk: [W, C] ids (stage 0) or [W, C, D] hidden; offsets [W] int32
+    (tokens already in context; -1 = masked lane); valids [W] int32;
+    pools: {"k": [n_layers, P+1, page, KV, Dh], "v": ...}.
+    Returns ([W, C, V|D] per-position outputs, updated pools).
+    """
+    if not supports_paged(cfg):
+        raise ValueError(
+            f"{cfg.name}: chunked prefill needs uniform full attention"
+        )
+    x = _embed(params, chunk, cfg)
+    offsets = jnp.asarray(offsets, jnp.int32)
+    valids = jnp.asarray(valids, jnp.int32)
+    active = offsets >= 0
+    pos0 = jnp.maximum(offsets, 0)
+    W, C = x.shape[:2]
+    positions = pos0[:, None] + jnp.arange(C, dtype=jnp.int32)  # [W, C]
+    # Write coordinates are layer-invariant: derive them once here, not
+    # inside the layer scan. Only real chunk tokens of active lanes
+    # touch reserved pages; everything else goes to the scratch page.
+    page = pools["k"].shape[2]
+    scratch = pools["k"].shape[1] - 1
+    writable = active[:, None] & (jnp.arange(C)[None, :] < valids[:, None])
+    rows = jnp.arange(W, dtype=jnp.int32)[:, None]
+    table_pages = block_tables[rows, jnp.minimum(positions // page,
+                                                 block_tables.shape[1] - 1)]
+    write_pages = jnp.where(writable, table_pages, scratch)
+    write_offs = positions % page
+    p_run = params["classes"]["c0"]
+
+    def body(x, scanned):
+        p_layer, kp, vp = scanned
+        h = rmsnorm(x, p_layer["ln1"], cfg.rms_eps)
+        a, (kp, vp) = paged_chunk_attention_block(
             h, p_layer["attn"], cfg,
             positions=positions, k_pages=kp, v_pages=vp,
             block_tables=block_tables,

@@ -1,19 +1,38 @@
 from .budget import ReplicaBudget
-from .engine import PipelineServer, Request, ServerStats
-from .paged_cache import PageError, PagePool
+from .cache import (
+    DenseSlotCache,
+    KVCacheManager,
+    PagedKVCache,
+    PageError,
+    PagePool,
+)
+from .engine import (
+    PipelineServer,
+    Request,
+    ServerStats,
+    reset_trace_counts,
+    trace_counts,
+)
 from .partition import partition_model, slice_stage_params, stage_configs
 from .router import RouteError, Router
+from .scheduler import StepScheduler
 
 __all__ = [
     "ReplicaBudget",
     "PipelineServer",
     "Request",
     "ServerStats",
+    "KVCacheManager",
+    "DenseSlotCache",
+    "PagedKVCache",
     "PageError",
     "PagePool",
+    "StepScheduler",
     "partition_model",
     "slice_stage_params",
     "stage_configs",
     "RouteError",
     "Router",
+    "trace_counts",
+    "reset_trace_counts",
 ]

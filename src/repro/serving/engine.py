@@ -3,54 +3,62 @@
 ``PipelineServer`` hosts G pipeline groups × R replicas of a partitioned
 model (:mod:`.partition`). Time advances in slots (the paper's delta);
 per slot every replica harvests budget, resident requests execute real
-JAX decode compute on their designated replicas, and new requests are
-admitted by the energy-aware :class:`Router` (Alg. 1) or held in a
-pending queue when the fleet is full (backpressure). Replica failure
-(ft/health) is just a drained budget — the router's mass shifts
-instantly and in-flight stage work is re-routed to a sibling replica.
+JAX decode compute on their designated replicas, and the control plane
+decides everything else. The engine is the *execution* third of a
+three-way split:
+
+* :mod:`.cache` — ``KVCacheManager``: slot + memory accounting, one
+  abstraction over the dense slot-stacked layout (``DenseSlotCache``)
+  and the paged pool (``PagedKVCache``). The engine and scheduler never
+  branch on cache layout.
+* :mod:`.scheduler` — ``StepScheduler``: admission (Alg. 1 routing),
+  FIFO backpressure queueing, failover re-placement, youngest-resident
+  preemption, and energy gating — one implementation for both layouts.
+* this module — building the jitted stage entry points, assembling
+  batched inputs, issuing the calls, and committing their results.
 
 Continuous batching
 -------------------
 Each (group, replica) owns one static-shaped batched KV cache with
-``max_batch`` per-request slots: every per-request cache (inner batch
-dim 1, per-slot context length in the stacked ``cache["len"]`` vector)
-is stacked on a leading slot axis. Per simulation slot a replica issues
-**one** jitted stage call covering every resident request at that stage
-— a masked ``decode_batch`` over the full slot width (non-participating
-slots keep their cache via a select) plus one vmapped ``prefill_batch``
-per distinct joining prompt length — instead of one Python-level JAX
-dispatch per request. Requests join and leave the batch mid-flight:
-slots are allocated on admission, freed on completion/drop, and
-re-allocated on a sibling after failover (the dead replica's slot is
-lost and the stage re-prefills).
+``max_batch`` per-request slots. Per simulation slot a replica issues
+**one** batched stage call covering every resident request at that stage
+— a masked decode over the full slot width plus the prefill work of any
+joining requests — and charges ``CE(PM)/kappa`` per slot per call (the
+paper's device-level job cost amortized over the batch). Call results
+are committed when the call completes, so an aborted call (replica
+death mid-call) never corrupts request state.
 
-Execution model per request = generate ``n_tokens`` autoregressively:
-each token passes stages 0..G-1. A stage call occupies its replica for
-``kappa(PM)`` slots (the paper's measured per-mode latency) and charges
-``CE(PM)/kappa`` per slot *per call* — the paper's device-level job
-cost, now amortized over every request in the batch. Call results
-(tokens / hidden handoffs) are committed when the call completes, so an
-aborted call (replica death mid-call) never corrupts request state.
+Chunked prefill (``prefill_chunk=N``)
+-------------------------------------
+Whole-prompt prefill issues one vmapped dispatch *per distinct prompt
+length*, so realistic mixed traffic re-jits continuously and long
+prompts head-of-line block resident decodes. With ``prefill_chunk``
+set, each joining prompt is split into fixed ``N``-token chunks that
+ride one static call shape — prefill chunks and decode tokens are
+co-scheduled in the same per-step call, per-slot offsets advancing
+through the chunk — so the number of compiled prefill computations is
+independent of the workload's prompt lengths (observable via
+:func:`trace_counts`) and per-step prefill work is bounded by ``N``.
+Uniform full-attention architectures only (the ``supports_paged``
+coverage); paged mode writes each chunk's K/V into the request's
+reserved pages incrementally.
 
 Paged KV cache (``paged=True``)
 -------------------------------
-The dense layout above reserves ``max_batch x max_len`` KV entries per
+The dense layout reserves ``max_batch x max_len`` KV entries per
 replica — worst-case memory for every slot. In paged mode each replica
-instead owns a shared pool of fixed-size pages
-(:mod:`.paged_cache`): a request holds ``ceil(context/page_size)``
-pages per group, named by its block table, and ``decode_paged`` (one
-natively-batched call, Pallas block-table gather on TPU) reads the
-scattered cache directly. Admission checks free *pages*, the router
-weighs replicas by free pages, failover re-allocates pages on the
-sibling, and page exhaustion mid-decode preempts the youngest resident
-back to the pending queue (prompt + generated tokens re-prefill on
-re-admission, so preemption is loss-free) instead of crashing.
+instead owns a shared pool of fixed-size pages: a request holds
+``ceil(context/page_size)`` pages per group named by its block table,
+``decode_paged`` reads the scattered cache directly, the router weighs
+replicas by free pages, and page exhaustion preempts the youngest
+resident back to the queue (loss-free: prompt + generated re-prefill).
 """
 
 from __future__ import annotations
 
-import collections
 import dataclasses
+import time
+from collections import Counter
 from typing import Any
 
 import jax
@@ -60,43 +68,54 @@ import numpy as np
 from ..core.power import PowerModePolicy, dynamic_policy
 from ..models.registry import Model
 from .budget import ReplicaBudget
-from .paged_cache import PagePool
+from .cache import DenseSlotCache, KVCacheManager, PagedKVCache
 from .partition import partition_model
-from .router import RouteError, Router
+from .router import Router
+from .scheduler import Request, StepScheduler
 
-__all__ = ["Request", "PipelineServer", "ServerStats"]
+__all__ = [
+    "Request",
+    "PipelineServer",
+    "ServerStats",
+    "trace_counts",
+    "reset_trace_counts",
+]
 
 
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray  # immutable prompt [S] — never mutated after submit
-    n_tokens: int  # tokens to generate
-    # runtime state
-    stage: int = 0
-    replicas: list[int] | None = None  # designated replica per group
-    slot_ids: list[int] | None = None  # batch slot per group
-    cache_ready: list[bool] | None = None  # per-group: slot cache prefilled
-    pages: list[list[int]] | None = None  # per-group physical pages (paged mode)
-    generated: list[int] = dataclasses.field(default_factory=list)
-    hidden: Any = None  # inter-stage activation
-    in_call: bool = False  # member of the current stage call
-    queued: bool = False  # waiting for admission (backpressure)
-    done: bool = False
-    dropped: bool = False
+# --- compile accounting ---------------------------------------------------
+# Incremented inside the traced stage entry points, so it counts actual jit
+# cache misses (= XLA compiles) per (kind, stage, shape). Used by the
+# chunked-prefill compile-count regression test and benchmarks/chunked_bench.
+_TRACE_COUNTS: Counter = Counter()
 
-    @property
-    def tokens(self) -> np.ndarray:
-        """Back-compat alias: the immutable prompt."""
-        return self.prompt
+
+def trace_counts() -> dict[tuple, int]:
+    """jit trace (cache-miss) count per ``(kind, stage, *shape)``."""
+    return dict(_TRACE_COUNTS)
+
+
+def reset_trace_counts() -> None:
+    _TRACE_COUNTS.clear()
+
+
+def _count_trace(kind: str, g: int, *shape: int) -> None:
+    _TRACE_COUNTS[(kind, g) + tuple(shape)] += 1
 
 
 @dataclasses.dataclass
 class _StageCall:
-    """One in-flight batched stage execution on a (group, replica)."""
+    """One in-flight batched stage execution on a (group, replica).
+
+    ``outputs[i]`` is a ``(kind, value, advance)`` tuple per member:
+    ``("token", t, 0)`` — final-stage token; ``("hidden", h, 0)`` —
+    handoff to the next stage; ``("chunk_part", h|None, n)`` — ``n``
+    more prompt tokens consumed, prefill continues next step;
+    ``("chunk_done", t|h, n)`` — the chunk that completed the stage's
+    prefill.
+    """
 
     members: list[Request]
-    outputs: list[Any]  # per-member logits/hidden, committed on completion
+    outputs: list[tuple]
     pm: int
     slots_left: int
 
@@ -109,7 +128,8 @@ class ServerStats:
     queued_jobs: int = 0  # submissions that waited in the pending queue
     tokens_generated: int = 0
     stage_executions: int = 0  # per-request stage work units
-    prefill_calls: int = 0  # batched JAX dispatches (prefill)
+    prefill_calls: int = 0  # batched JAX dispatches (whole-prompt prefill)
+    chunk_prefill_calls: int = 0  # batched JAX dispatches (chunked prefill)
     decode_calls: int = 0  # batched JAX dispatches (decode)
     rerouted_stages: int = 0
     preempted_jobs: int = 0  # paged: evicted on page exhaustion, requeued
@@ -123,6 +143,430 @@ class ServerStats:
     def downtime_fraction(self) -> float:
         denom = self.slots * self.n_groups * self.n_replicas
         return self.downtime_replica_slots / max(denom, 1)
+
+
+def _pad_tail(x, C: int):
+    """Pad a [1, c, ...] chunk slice to width ``C`` along axis 1."""
+    c = x.shape[1]
+    if c == C:
+        return x
+    pad = [(0, 0), (0, C - c)] + [(0, 0)] * (x.ndim - 2)
+    return jnp.pad(x, pad)
+
+
+def _seq_len(seq) -> int:
+    """Length of a stage input: [S] token ids or [1, S, D] hidden."""
+    return seq.shape[1] if seq.ndim >= 2 else len(seq)
+
+
+def _group_by_len(jobs) -> dict[int, list]:
+    """Whole-prompt prefill pays one dispatch per distinct input length."""
+    by_len: dict[int, list] = {}
+    for i, m, inp in jobs:
+        by_len.setdefault(int(inp.shape[1]), []).append((i, m, inp))
+    return by_len
+
+
+def _emit_whole_outputs(server, g, grp, out, outputs, mgr, length):
+    """Shared whole-prefill tail for both backends: record the host
+    length mirror and emit one token (batched argmax, one host sync) or
+    hidden handoff per member of a same-length dispatch group."""
+    for _, m, _ in grp:
+        mgr.lengths[m.slot_ids[g]] = length
+    if g == server.G - 1:
+        toks = np.asarray(jnp.argmax(out[:, 0, -1], axis=-1))
+        for j, (i, _, _) in enumerate(grp):
+            outputs[i] = ("token", int(toks[j]), 0)
+    else:
+        for j, (i, _, _) in enumerate(grp):
+            outputs[i] = ("hidden", out[j], 0)
+
+
+def _emit_chunk_outputs(server, g, jobs, outputs, mgr, toks, hidden_at):
+    """Shared chunk-job tail for both backends: advance the host length
+    mirror, decide per-lane completion, and emit ``chunk_part`` /
+    ``chunk_done`` results. ``toks`` is the batched [W, C] argmax (last
+    stage only); ``hidden_at(slot, valid)`` slices a lane's [1, valid, D]
+    hidden from the dispatch output (mid stages only)."""
+    last = g == server.G - 1
+    for i, m, seq, pos, valid in jobs:
+        slot = m.slot_ids[g]
+        mgr.lengths[slot] = pos + valid
+        done = pos + valid == _seq_len(seq)
+        if last:
+            value = int(toks[slot, valid - 1]) if done else None
+        else:
+            value = hidden_at(slot, valid)
+        outputs[i] = ("chunk_done" if done else "chunk_part", value, valid)
+
+
+class _DenseExec:
+    """Dense execution backend for one stage: slot-stacked cache, vmapped
+    entry points, masked full-width decode/chunk dispatches."""
+
+    def __init__(self, server: "PipelineServer", g: int):
+        self.server = server
+        self.g = g
+        model_g, _ = server.stages[g]
+        self.model_g = model_g
+        max_len = server.max_len
+
+        @jax.jit
+        def prefill_into(params, batch, cache, slot_idx):
+            # batch leaves: [N, 1, S(, D)] — N joining requests, same S.
+            leaf = jax.tree_util.tree_leaves(batch)[0]
+            _count_trace("prefill", g, leaf.shape[0], leaf.shape[2])
+            out, new = model_g.prefill_batch(params, batch, max_len)
+            cache = jax.tree_util.tree_map(
+                lambda big, small: big.at[slot_idx].set(small), cache, new
+            )
+            return out, cache
+
+        @jax.jit
+        def decode_masked(params, inp, cache, mask):
+            # inp: [W, 1, 1(, D)] over the full slot width W = max_batch;
+            # mask selects participating slots — the others' caches are
+            # preserved by the select (their computed garbage is dropped).
+            _count_trace("decode", g, mask.shape[0])
+            out, new = model_g.decode_batch(params, inp, cache)
+            merged = jax.tree_util.tree_map(
+                lambda n, o: jnp.where(
+                    mask.reshape((mask.shape[0],) + (1,) * (n.ndim - 1)), n, o
+                ),
+                new,
+                cache,
+            )
+            return out, merged
+
+        self.prefill_into = prefill_into
+        self.decode_masked = decode_masked
+        self.chunk_masked = None
+        if server.prefill_chunk is not None:
+
+            @jax.jit
+            def chunk_masked(params, inp, cache, offs, valids, mask):
+                # inp leaves: [W, 1, C(, D)] — one fixed chunk width for
+                # every prompt length in the workload.
+                leaf = jax.tree_util.tree_leaves(inp)[0]
+                _count_trace("chunk", g, leaf.shape[0], leaf.shape[2])
+                out, new = model_g.prefill_chunk_batch(
+                    params, inp, cache, offs, valids
+                )
+                merged = jax.tree_util.tree_map(
+                    lambda n, o: jnp.where(
+                        mask.reshape((mask.shape[0],) + (1,) * (n.ndim - 1)), n, o
+                    ),
+                    new,
+                    cache,
+                )
+                return out, merged
+
+            self.chunk_masked = chunk_masked
+
+    def init_cache(self):
+        """Zeroed slot-stacked cache: [max_batch, <B=1 cache>]."""
+        s = self.server
+        shapes = self.model_g.cache_shapes(1, s.max_len)
+        return jax.tree_util.tree_map(
+            lambda sh: jnp.zeros((s.max_batch,) + tuple(sh.shape), sh.dtype), shapes
+        )
+
+    # -- dispatches ------------------------------------------------------
+    def run_prefill_whole(self, r, jobs, outputs, mgr: KVCacheManager):
+        """jobs: [(out_idx, member, inp [1,S(,D)])], grouped by length."""
+        s, g = self.server, self.g
+        _, params_g = s.stages[g]
+        cache = s._caches[(g, r)]
+        key = "tokens" if g == 0 else "hidden"
+        for length, grp in sorted(_group_by_len(jobs).items()):
+            stacked = jnp.stack([inp for _, _, inp in grp])
+            slots = jnp.asarray([m.slot_ids[g] for _, m, _ in grp], jnp.int32)
+            out, cache = self.prefill_into(params_g, {key: stacked}, cache, slots)
+            s.stats.prefill_calls += 1
+            _emit_whole_outputs(s, g, grp, out, outputs, mgr, length)
+        s._caches[(g, r)] = cache
+
+    def run_chunks(self, r, jobs, outputs, mgr: KVCacheManager):
+        """jobs: [(out_idx, member, seq, pos, valid)] — one fixed-shape
+        masked dispatch advances every joining prompt by <= C tokens."""
+        s, g = self.server, self.g
+        _, params_g = s.stages[g]
+        C = s.prefill_chunk
+        W = s.max_batch
+        cache = s._caches[(g, r)]
+        last = g == s.G - 1
+        mask = np.zeros((W,), bool)
+        offs = np.zeros((W,), np.int32)
+        valids = np.zeros((W,), np.int32)
+        for _, m, _, pos, valid in jobs:
+            slot = m.slot_ids[g]
+            mask[slot] = True
+            offs[slot] = pos
+            valids[slot] = valid
+        if g == 0:
+            buf = np.zeros((W, 1, C), np.int32)
+            for _, m, seq, pos, valid in jobs:
+                buf[m.slot_ids[g], 0, :valid] = seq[pos : pos + valid]
+            inp = {"tokens": jnp.asarray(buf)}
+        else:
+            slots = np.asarray([m.slot_ids[g] for _, m, _, _, _ in jobs], np.int32)
+            hs = jnp.stack(
+                [
+                    _pad_tail(seq[:, pos : pos + valid], C)
+                    for _, _, seq, pos, valid in jobs
+                ]
+            )  # [N, 1, C, D]
+            inp = {
+                "hidden": jnp.zeros((W, 1, C, s.cfg.d_model), hs.dtype)
+                .at[jnp.asarray(slots)]
+                .set(hs)
+            }
+        out, cache = self.chunk_masked(
+            params_g, inp, cache, jnp.asarray(offs), jnp.asarray(valids),
+            jnp.asarray(mask),
+        )
+        s._caches[(g, r)] = cache
+        s.stats.chunk_prefill_calls += 1
+        toks = np.asarray(jnp.argmax(out[:, 0], axis=-1)) if last else None
+        _emit_chunk_outputs(
+            s, g, jobs, outputs, mgr, toks,
+            lambda slot, valid: out[slot, :, :valid],  # [1, valid, D]
+        )
+
+    def run_decode(self, r, jobs, outputs, mgr: KVCacheManager):
+        """jobs: [(out_idx, member)] — one masked dispatch over the full
+        static slot width."""
+        s, g = self.server, self.g
+        _, params_g = s.stages[g]
+        cache = s._caches[(g, r)]
+        last = g == s.G - 1
+        W = s.max_batch
+        mask = np.zeros((W,), bool)
+        slots = np.asarray([m.slot_ids[g] for _, m in jobs], np.int32)
+        mask[slots] = True
+        if g == 0:
+            buf = np.zeros((W, 1, 1), np.int32)
+            for _, m in jobs:
+                buf[m.slot_ids[g], 0, 0] = m.generated[-1]
+            inp = jnp.asarray(buf)
+        else:
+            # Assemble on device: the handoffs are device arrays and a
+            # host round-trip per member would not amortize. After an
+            # upstream re-prefill the handoff carries the whole
+            # prefix; a caching stage only consumes the newest position.
+            hs = jnp.stack(
+                [
+                    m.hidden if m.hidden.shape[1] == 1 else m.hidden[:, -1:]
+                    for _, m in jobs
+                ]
+            )
+            inp = (
+                jnp.zeros((W, 1, 1, s.cfg.d_model), hs.dtype)
+                .at[jnp.asarray(slots)]
+                .set(hs)
+            )
+        out, cache = self.decode_masked(params_g, inp, cache, jnp.asarray(mask))
+        s._caches[(g, r)] = cache
+        s.stats.decode_calls += 1
+        for _, m in jobs:
+            mgr.lengths[m.slot_ids[g]] += 1
+        if last:
+            toks = np.asarray(jnp.argmax(out[:, 0, -1], axis=-1))
+            for i, m in jobs:
+                outputs[i] = ("token", int(toks[m.slot_ids[g]]), 0)
+        else:
+            for i, m in jobs:
+                outputs[i] = ("hidden", out[m.slot_ids[g]], 0)
+
+
+class _PagedExec:
+    """Paged execution backend for one stage: shared page pool, block
+    tables from the manager, natively batched decode/chunk dispatches."""
+
+    def __init__(self, server: "PipelineServer", g: int):
+        self.server = server
+        self.g = g
+        model_g, _ = server.stages[g]
+        self.model_g = model_g
+        ps = server.page_size
+
+        @jax.jit
+        def prefill_pages(params, batch, kp, vp, page_ids):
+            # batch leaves: [N, 1, S(, D)]; page_ids: [N, NBs] with
+            # NBs * ps >= S. The transient dense cache is per-call only.
+            leaf = jax.tree_util.tree_leaves(batch)[0]
+            _count_trace("prefill_pages", g, leaf.shape[0], leaf.shape[2])
+            N, NBs = page_ids.shape
+            out, cache = model_g.prefill_batch(params, batch, NBs * ps)
+            flat = page_ids.reshape(-1)
+
+            def scatter(pool, leaf):
+                # leaf: [N, n_layers, 1, NBs*ps, KV, Dh] -> page blocks
+                n = leaf.shape[1]
+                x = leaf[:, :, 0].reshape(N, n, NBs, ps, *leaf.shape[4:])
+                x = x.transpose(1, 0, 2, 3, 4, 5).reshape(
+                    n, N * NBs, ps, *leaf.shape[4:]
+                )
+                return pool.at[:, flat].set(x.astype(pool.dtype))
+
+            kp = scatter(kp, cache["c0"]["k"])
+            vp = scatter(vp, cache["c0"]["v"])
+            return out, kp, vp
+
+        @jax.jit
+        def decode_fn(params, inp, pools, lens, bt):
+            _count_trace("decode_paged", g, lens.shape[0])
+            return model_g.decode_paged(params, inp, pools, lens, bt)
+
+        self.prefill_pages = prefill_pages
+        self.decode_fn = decode_fn
+        self.chunk_pages = None
+        if server.prefill_chunk is not None:
+
+            @jax.jit
+            def chunk_pages(params, inp, kp, vp, offs, valids, bt):
+                # inp: [W, C(, D)] — one fixed chunk width; each lane's
+                # K/V scatter into its reserved pages incrementally.
+                _count_trace("chunk_paged", g, inp.shape[0], inp.shape[1])
+                out, pools = model_g.prefill_chunk_paged(
+                    params, inp, {"k": kp, "v": vp}, offs, valids, bt
+                )
+                return out, pools["k"], pools["v"]
+
+            self.chunk_pages = chunk_pages
+
+    def init_cache(self):
+        """Shared page pool: [n_layers, P+1, page, KV, Dh] (page index P
+        is the scratch page for masked lanes)."""
+        s = self.server
+        c = self.model_g.cfg
+        shape = (
+            c.n_layers, s.max_pages + 1, s.page_size,
+            c.n_kv_heads, c.head_dim,
+        )
+        return {
+            "k": jnp.zeros(shape, c.compute_dtype),
+            "v": jnp.zeros(shape, c.compute_dtype),
+        }
+
+    # -- dispatches ------------------------------------------------------
+    def run_prefill_whole(self, r, jobs, outputs, mgr: PagedKVCache):
+        s, g = self.server, self.g
+        _, params_g = s.stages[g]
+        cache = s._caches[(g, r)]
+        key = "tokens" if g == 0 else "hidden"
+        for length, grp in sorted(_group_by_len(jobs).items()):
+            stacked = jnp.stack([inp for _, _, inp in grp])
+            nbs = mgr.pool.blocks_for(length)
+            page_ids = np.asarray(
+                [mgr.pages[m.rid][:nbs] for _, m, _ in grp], np.int32
+            )
+            out, kp, vp = self.prefill_pages(
+                params_g, {key: stacked}, cache["k"], cache["v"],
+                jnp.asarray(page_ids),
+            )
+            cache = {"k": kp, "v": vp}
+            s.stats.prefill_calls += 1
+            _emit_whole_outputs(s, g, grp, out, outputs, mgr, length)
+        s._caches[(g, r)] = cache
+
+    def run_chunks(self, r, jobs, outputs, mgr: PagedKVCache):
+        s, g = self.server, self.g
+        _, params_g = s.stages[g]
+        C = s.prefill_chunk
+        W = s.max_batch
+        cache = s._caches[(g, r)]
+        last = g == s.G - 1
+        offs = np.full((W,), -1, np.int32)  # -1 = masked lane
+        valids = np.zeros((W,), np.int32)
+        for _, m, _, pos, valid in jobs:
+            slot = m.slot_ids[g]
+            offs[slot] = pos
+            valids[slot] = valid
+        if g == 0:
+            buf = np.zeros((W, C), np.int32)
+            for _, m, seq, pos, valid in jobs:
+                buf[m.slot_ids[g], :valid] = seq[pos : pos + valid]
+            inp = jnp.asarray(buf)
+        else:
+            slots = np.asarray([m.slot_ids[g] for _, m, _, _, _ in jobs], np.int32)
+            hs = jnp.stack(
+                [
+                    _pad_tail(seq[:, pos : pos + valid], C)[0]
+                    for _, _, seq, pos, valid in jobs
+                ]
+            )  # [N, C, D]
+            inp = (
+                jnp.zeros((W, C, s.cfg.d_model), hs.dtype)
+                .at[jnp.asarray(slots)]
+                .set(hs)
+            )
+        out, kp, vp = self.chunk_pages(
+            params_g, inp, cache["k"], cache["v"],
+            jnp.asarray(offs), jnp.asarray(valids), mgr.device_block_table(),
+        )
+        s._caches[(g, r)] = {"k": kp, "v": vp}
+        s.stats.chunk_prefill_calls += 1
+        toks = np.asarray(jnp.argmax(out, axis=-1)) if last else None
+        _emit_chunk_outputs(
+            s, g, jobs, outputs, mgr, toks,
+            lambda slot, valid: out[slot, :valid][None],  # [1, valid, D]
+        )
+
+    def run_decode(self, r, jobs, outputs, mgr: PagedKVCache):
+        """One natively-batched paged dispatch over the slot width.
+        Lanes marked -1 write to the scratch page and attend one masked
+        position; their outputs are never read. The device block table
+        is cached by the manager and refreshed only on page alloc/free."""
+        s, g = self.server, self.g
+        _, params_g = s.stages[g]
+        cache = s._caches[(g, r)]
+        last = g == s.G - 1
+        W = s.max_batch
+        lens_arr = np.full((W,), -1, np.int32)
+        for _, m in jobs:
+            slot = m.slot_ids[g]
+            lens_arr[slot] = mgr.lengths[slot]
+        if g == 0:
+            buf = np.zeros((W, 1), np.int32)
+            for _, m in jobs:
+                buf[m.slot_ids[g], 0] = m.generated[-1]
+            inp = jnp.asarray(buf)
+        else:
+            slots = np.asarray([m.slot_ids[g] for _, m in jobs], np.int32)
+            # Hand-offs: [1, D] from an upstream decode, [1, S, D]
+            # after an upstream re-prefill (consume the last position).
+            hs = jnp.stack(
+                [
+                    m.hidden if m.hidden.ndim == 2 else m.hidden[:, -1]
+                    for _, m in jobs
+                ]
+            )  # [N, 1, D]
+            inp = (
+                jnp.zeros((W, 1, s.cfg.d_model), hs.dtype)
+                .at[jnp.asarray(slots)]
+                .set(hs)
+            )
+        out, cache = self.decode_fn(
+            params_g, inp, {"k": cache["k"], "v": cache["v"]},
+            jnp.asarray(lens_arr), mgr.device_block_table(),
+        )
+        s._caches[(g, r)] = cache
+        s.stats.decode_calls += 1
+        for _, m in jobs:
+            mgr.lengths[m.slot_ids[g]] += 1
+        if last:
+            toks = np.asarray(jnp.argmax(out[:, 0], axis=-1))
+            for i, m in jobs:
+                outputs[i] = ("token", int(toks[m.slot_ids[g]]), 0)
+        else:
+            # Hand-offs stay [1, D] (not dense's [1, 1, D]): the
+            # per-member [None] here costs one eagerly-dispatched
+            # expand_dims per request per stage round, which measured
+            # as a whole-percent tokens/s hit; both consumers branch
+            # on ndim instead.
+            for i, m in jobs:
+                outputs[i] = ("hidden", out[m.slot_ids[g]], 0)
 
 
 class PipelineServer:
@@ -143,6 +587,7 @@ class PipelineServer:
         paged: bool = False,
         page_size: int = 16,
         max_pages: int | None = None,
+        prefill_chunk: int | None = None,
         seed: int = 0,
     ):
         self.cfg = model.cfg
@@ -150,22 +595,27 @@ class PipelineServer:
         self.G, self.R = n_groups, n_replicas
         self.max_len = max_len
         self.max_batch = max_batch
-        self.max_queue = max_queue
         self.paged = paged
         self.page_size = page_size
-        # Block-table width: max context per request, in pages.
-        self._nb_max = -(-max_len // page_size)
+        self.prefill_chunk = prefill_chunk
         # Default pool = dense capacity (max_batch full-length contexts);
         # the paged win comes from setting max_pages *below* this while
         # raising max_batch — short requests then pack the same memory.
-        self.max_pages = (
-            max_pages if max_pages is not None else max_batch * self._nb_max
-        )
+        nb_max = -(-max_len // page_size)
+        self.max_pages = max_pages if max_pages is not None else max_batch * nb_max
         if paged and any(m.decode_paged is None for m, _ in self.stages):
             raise ValueError(
                 f"{model.cfg.name}: paged serving needs uniform full "
                 "attention (see repro.models.transformer.supports_paged)"
             )
+        if prefill_chunk is not None:
+            if prefill_chunk <= 0:
+                raise ValueError("prefill_chunk must be a positive token count")
+            if any(m.prefill_chunk is None for m, _ in self.stages):
+                raise ValueError(
+                    f"{model.cfg.name}: chunked prefill needs uniform full "
+                    "attention (see repro.models.transformer.supports_paged)"
+                )
         self.pm_policy = pm_policy or dynamic_policy(100)
         # Independent RNG streams: harvest/arrival draws and routing draws
         # must not be correlated (same-integer seeding would lockstep them).
@@ -184,188 +634,37 @@ class PipelineServer:
             policy=policy, long_term_rates=long_term_rates, seed=router_seq
         )
         self.stats = ServerStats(n_groups=n_groups, n_replicas=n_replicas)
-        self._active: list[Request] = []
-        self._pending: collections.deque[Request] = collections.deque()
         self._next_rid = 0
-        # Continuous-batching state: per (g, r) slot table, stacked cache,
-        # in-flight call, and the per-stage jitted batched entry points.
-        self._slot_map: dict[tuple[int, int], list[int | None]] = {
-            (g, r): [None] * max_batch
+        # One cache manager per (group, replica): the scheduler and the
+        # single _start_call below talk only to this interface.
+        if paged:
+            self.managers: dict[tuple[int, int], KVCacheManager] = {
+                (g, r): PagedKVCache(max_batch, max_len, page_size, self.max_pages)
+                for g in range(n_groups)
+                for r in range(n_replicas)
+            }
+        else:
+            self.managers = {
+                (g, r): DenseSlotCache(max_batch, max_len)
+                for g in range(n_groups)
+                for r in range(n_replicas)
+            }
+        self.scheduler = StepScheduler(
+            budgets=self.budgets,
+            managers=self.managers,
+            router=self.router,
+            stats=self.stats,
+            max_queue=max_queue,
+        )
+        self._exec = [
+            (_PagedExec if paged else _DenseExec)(self, g) for g in range(n_groups)
+        ]
+        self._caches = {
+            (g, r): self._exec[g].init_cache()
             for g in range(n_groups)
             for r in range(n_replicas)
         }
-        if paged:
-            self._pools = {
-                (g, r): PagePool(self.max_pages, page_size)
-                for g in range(n_groups)
-                for r in range(n_replicas)
-            }
-            self._lens = {
-                (g, r): np.zeros(max_batch, np.int64)
-                for g in range(n_groups)
-                for r in range(n_replicas)
-            }
-            self._caches = {
-                (g, r): self._init_paged_cache(g)
-                for g in range(n_groups)
-                for r in range(n_replicas)
-            }
-            # Host block tables (+ lazily refreshed device copies): rows
-            # change only on page alloc/free, not per decode call.
-            self._bt = {
-                (g, r): np.full(
-                    (max_batch, self._nb_max), self.max_pages, np.int32
-                )
-                for g in range(n_groups)
-                for r in range(n_replicas)
-            }
-            self._bt_dev: dict[tuple[int, int], Any] = {}
-            self._fns = [self._build_paged_fns(g) for g in range(n_groups)]
-        else:
-            self._caches = {
-                (g, r): self._init_cache(g)
-                for g in range(n_groups)
-                for r in range(n_replicas)
-            }
-            self._fns = [self._build_stage_fns(g) for g in range(n_groups)]
         self._calls: dict[tuple[int, int], _StageCall] = {}
-
-    # ------------------------------------------------------------------
-    # Batched cache plumbing
-    # ------------------------------------------------------------------
-    def _init_cache(self, g: int):
-        """Zeroed slot-stacked cache for stage g: [max_batch, <B=1 cache>]."""
-        model_g, _ = self.stages[g]
-        shapes = model_g.cache_shapes(1, self.max_len)
-        return jax.tree_util.tree_map(
-            lambda s: jnp.zeros((self.max_batch,) + tuple(s.shape), s.dtype), shapes
-        )
-
-    def _build_stage_fns(self, g: int):
-        """Jitted batched stage entry points (one pair per stage, built
-        once so jit caches by shape, not by call site)."""
-        model_g, _ = self.stages[g]
-        max_len = self.max_len
-
-        @jax.jit
-        def prefill_into(params, batch, cache, slot_idx):
-            # batch leaves: [N, 1, S(, D)] — N joining requests, same S.
-            out, new = model_g.prefill_batch(params, batch, max_len)
-            cache = jax.tree_util.tree_map(
-                lambda big, small: big.at[slot_idx].set(small), cache, new
-            )
-            return out, cache
-
-        @jax.jit
-        def decode_masked(params, inp, cache, mask):
-            # inp: [W, 1, 1(, D)] over the full slot width W = max_batch;
-            # mask selects participating slots — the others' caches are
-            # preserved by the select (their computed garbage is dropped).
-            out, new = model_g.decode_batch(params, inp, cache)
-            merged = jax.tree_util.tree_map(
-                lambda n, o: jnp.where(
-                    mask.reshape((mask.shape[0],) + (1,) * (n.ndim - 1)), n, o
-                ),
-                new,
-                cache,
-            )
-            return out, merged
-
-        return prefill_into, decode_masked
-
-    # ------------------------------------------------------------------
-    # Paged cache plumbing
-    # ------------------------------------------------------------------
-    def _init_paged_cache(self, g: int):
-        """Shared page pool for stage g: [n_layers, P+1, page, KV, Dh]
-        (page index P is the scratch page for masked lanes)."""
-        c = self.stages[g][0].cfg
-        shape = (
-            c.n_layers, self.max_pages + 1, self.page_size,
-            c.n_kv_heads, c.head_dim,
-        )
-        return {
-            "k": jnp.zeros(shape, c.compute_dtype),
-            "v": jnp.zeros(shape, c.compute_dtype),
-        }
-
-    def _build_paged_fns(self, g: int):
-        """Jitted paged stage entry points: prefill-and-scatter (dense
-        prefill compute, then one scatter writes the K/V into the
-        request's pages) and the natively-batched paged decode."""
-        model_g, _ = self.stages[g]
-        ps = self.page_size
-
-        @jax.jit
-        def prefill_pages(params, batch, kp, vp, page_ids):
-            # batch leaves: [N, 1, S(, D)]; page_ids: [N, NBs] with
-            # NBs * ps >= S. The transient dense cache is per-call only.
-            N, NBs = page_ids.shape
-            out, cache = model_g.prefill_batch(params, batch, NBs * ps)
-            flat = page_ids.reshape(-1)
-
-            def scatter(pool, leaf):
-                # leaf: [N, n_layers, 1, NBs*ps, KV, Dh] -> page blocks
-                n = leaf.shape[1]
-                x = leaf[:, :, 0].reshape(N, n, NBs, ps, *leaf.shape[4:])
-                x = x.transpose(1, 0, 2, 3, 4, 5).reshape(
-                    n, N * NBs, ps, *leaf.shape[4:]
-                )
-                return pool.at[:, flat].set(x.astype(pool.dtype))
-
-            kp = scatter(kp, cache["c0"]["k"])
-            vp = scatter(vp, cache["c0"]["v"])
-            return out, kp, vp
-
-        decode_paged = jax.jit(model_g.decode_paged)
-        return prefill_pages, decode_paged
-
-    def _free_pages(self, g: int, r: int, req: Request) -> None:
-        if not self.paged or req.pages is None:
-            return
-        if req.pages[g]:
-            self._pools[(g, r)].free(req.pages[g], req.rid)
-            req.pages[g] = []
-
-    def _bt_set_row(self, g: int, r: int, slot: int, pages: list[int]) -> None:
-        row = self._bt[(g, r)][slot]
-        row[:] = self.max_pages  # scratch
-        row[: len(pages)] = pages
-        self._bt_dev.pop((g, r), None)
-
-    def _alloc_slot(self, g: int, r: int, rid: int) -> int:
-        table = self._slot_map[(g, r)]
-        idx = table.index(None)
-        table[idx] = rid
-        return idx
-
-    def _free_slot(self, g: int, r: int, req: Request) -> None:
-        table = self._slot_map[(g, r)]
-        slot = req.slot_ids[g]
-        if slot is not None and table[slot] == req.rid:
-            table[slot] = None
-            if self.paged:
-                # Freed lanes must never alias live pages: scratch the row.
-                self._bt_set_row(g, r, slot, [])
-                self._lens[(g, r)][slot] = 0
-
-    def _free_counts(self) -> list[list[int]]:
-        """Router capacity weights: free batch slots (dense) or free
-        pages (paged; a replica with no free slot is full either way)."""
-        if self.paged:
-            return [
-                [
-                    0
-                    if self._slot_map[(g, r)].count(None) == 0
-                    else self._pools[(g, r)].free_pages
-                    for r in range(self.R)
-                ]
-                for g in range(self.G)
-            ]
-        return [
-            [self._slot_map[(g, r)].count(None) for r in range(self.R)]
-            for g in range(self.G)
-        ]
 
     # ------------------------------------------------------------------
     # Admission
@@ -375,392 +674,164 @@ class PipelineServer:
         or hold it in the pending queue when the fleet is full."""
         self.stats.submitted += 1
         req = Request(
-            rid=self._next_rid, prompt=np.asarray(tokens), n_tokens=n_tokens
+            rid=self._next_rid,
+            prompt=np.asarray(tokens),
+            n_tokens=n_tokens,
+            t_submit=time.perf_counter(),
         )
         self._next_rid += 1
-        final_ctx = len(req.prompt) + n_tokens
-        if final_ctx > self.max_len or (
-            self.paged and -(-final_ctx // self.page_size) > self.max_pages
-        ):
-            # The final context cannot fit a slot's cache / block-table
-            # row / page pool, so the request can never complete: reject
-            # up front rather than corrupt the cache tail, overflow the
-            # table mid-decode, park an unadmittable request at the
-            # queue head forever, or preempt healthy residents while
-            # growing toward an inevitable drop.
-            req.dropped = True
-            self.stats.dropped_jobs += 1
-            return None
-        if any(not any(b.alive for b in group) for group in self.budgets):
-            # A whole group is dead: nothing to wait for.
-            req.dropped = True
-            self.stats.dropped_jobs += 1
-            return None
-        # FIFO fairness: a new arrival never jumps requests already
-        # waiting in the queue (capacity freed since the last drain goes
-        # to the queue head on the next step, not to the newest submit).
-        if not self._pending and self._try_admit(req):
-            return req
-        if self.max_queue is not None and len(self._pending) >= self.max_queue:
-            req.dropped = True
-            self.stats.dropped_jobs += 1
-            return None
-        req.queued = True
-        self._pending.append(req)
-        self.stats.queued_jobs += 1
-        return req
-
-    def _try_admit(self, req: Request) -> bool:
-        try:
-            replicas = self.router.route(self.budgets, free_slots=self._free_counts())
-        except RouteError:
-            return False
-        if self.paged:
-            # Reserve the full current context up front — prompt plus any
-            # tokens already generated (a preempted request re-admits with
-            # its whole prefix to re-prefill) — so admissions within a
-            # slot see each other's claims and an under-reserved re-admit
-            # cannot immediately preempt healthy residents. Decode growth
-            # still allocates lazily (see _ensure_pages).
-            blocks = self._pools[(0, replicas[0])].blocks_for(
-                len(req.prompt) + len(req.generated)
-            )
-            pools = [self._pools[(g, replicas[g])] for g in range(self.G)]
-            if any(not p.can_alloc(blocks) for p in pools):
-                return False
-            req.pages = [p.alloc(blocks, req.rid) for p in pools]
-        req.replicas = replicas
-        req.slot_ids = [self._alloc_slot(g, replicas[g], req.rid) for g in range(self.G)]
-        if self.paged:
-            for g in range(self.G):
-                self._bt_set_row(g, replicas[g], req.slot_ids[g], req.pages[g])
-        req.cache_ready = [False] * self.G
-        req.queued = False
-        self._active.append(req)
-        self.stats.peak_active = max(self.stats.peak_active, len(self._active))
-        return True
+        return self.scheduler.submit(req)
 
     # ------------------------------------------------------------------
-    # Batched stage execution
+    # Batched stage execution (single path over KVCacheManager)
     # ------------------------------------------------------------------
+    def _stage_input(self, req: Request, g: int):
+        """The sequence this request still has to prefill at stage g."""
+        if g == 0:
+            ids = np.asarray(req.prompt, np.int32)
+            if req.generated:
+                # Failover/preemption re-prefill: rebuild the full prefix
+                # — prompt plus every generated token, the current round's
+                # input included — from the immutable prompt. The last
+                # position's output then replaces the decode step the dead
+                # replica lost, so decoding stays token-exact across any
+                # number of failovers.
+                ids = np.concatenate([ids, np.asarray(req.generated, np.int32)])
+            return ids
+        # Upstream handoff: [1, S, D] after a prefill/chunk assembly,
+        # [1, D] ([1, 1, D] dense) after an upstream decode.
+        h = req.hidden
+        return h[:, None] if h.ndim == 2 else h
+
     def _start_call(self, g: int, r: int, members: list[Request]) -> _StageCall | None:
         """Issue the batched JAX work for every member and open the call.
-        Paged mode may defer members (page exhaustion) and returns None
-        when nothing could be served this slot."""
-        if self.paged:
-            return self._start_call_paged(g, r, members)
-        return self._start_call_dense(g, r, members)
 
-    def _start_call_dense(self, g: int, r: int, members: list[Request]) -> _StageCall:
-        _, params_g = self.stages[g]
-        b = self.budgets[g][r]
-        pm = b.pm
-        prefill_into, decode_masked = self._fns[g]
-        outputs: list[Any] = [None] * len(members)
-        cache = self._caches[(g, r)]
+        One implementation for both cache layouts: members secure memory
+        through the manager oldest-first (the scheduler preempts the
+        youngest resident on paged exhaustion — members that cannot get
+        memory this slot are deferred), then at most three fixed-shape
+        dispatches run — whole-prompt prefills (per distinct length,
+        legacy path), ONE chunked-prefill call, and ONE masked decode —
+        so prefill chunks and decode tokens are co-scheduled per step.
+        """
+        mgr = self.managers[(g, r)]
+        sched = self.scheduler
+        chunk = self.prefill_chunk
 
-        pre = [i for i, m in enumerate(members) if not m.cache_ready[g]]
-        dec = [i for i, m in enumerate(members) if m.cache_ready[g]]
-
-        # Prefills, grouped by prompt/handoff length (one dispatch each).
-        by_len: dict[int, list[tuple[int, Any]]] = {}
-        for i in pre:
-            m = members[i]
-            if g == 0:
-                ids = np.asarray(m.prompt, np.int32)
-                if m.generated:
-                    # Failover re-prefill: rebuild the full prefix — prompt
-                    # plus every generated token, the current round's input
-                    # included — from the immutable prompt. The last
-                    # position's hidden/logits then replace the decode step
-                    # the dead replica lost, so decoding stays token-exact
-                    # across any number of failovers.
-                    ids = np.concatenate([ids, np.asarray(m.generated, np.int32)])
-                inp = jnp.asarray(ids)[None, :]
-            else:
-                inp = m.hidden  # [1, S, D] handoff from the upstream stage
-            by_len.setdefault(int(inp.shape[1]), []).append((i, inp))
-        last = g == self.G - 1
-        key = "tokens" if g == 0 else "hidden"
-        for _length, grp in sorted(by_len.items()):
-            idxs = [i for i, _ in grp]
-            stacked = jnp.stack([x for _, x in grp])
-            slots = jnp.asarray([members[i].slot_ids[g] for i in idxs], jnp.int32)
-            out, cache = prefill_into(params_g, {key: stacked}, cache, slots)
-            self.stats.prefill_calls += 1
-            if last:
-                # One batched argmax + one host sync for the whole group
-                # (a per-request int() would cost one sync per token).
-                toks = np.asarray(jnp.argmax(out[:, 0, -1], axis=-1))
-                for j, i in enumerate(idxs):
-                    outputs[i] = int(toks[j])
-            else:
-                for j, i in enumerate(idxs):
-                    outputs[i] = out[j]
-
-        # Decode: one masked dispatch over the full static slot width.
-        if dec:
-            W = self.max_batch
-            mask = np.zeros((W,), bool)
-            slots = np.asarray([members[i].slot_ids[g] for i in dec], np.int32)
-            mask[slots] = True
-            if g == 0:
-                buf = np.zeros((W, 1, 1), np.int32)
-                for i in dec:
-                    buf[members[i].slot_ids[g], 0, 0] = members[i].generated[-1]
-                inp = jnp.asarray(buf)
-            else:
-                # Assemble on device: the handoffs are device arrays and a
-                # host round-trip per member would not amortize. After an
-                # upstream re-prefill the handoff carries the whole
-                # prefix; a caching stage only consumes the newest position.
-                hs = jnp.stack(
-                    [
-                        m.hidden if m.hidden.shape[1] == 1 else m.hidden[:, -1:]
-                        for m in (members[i] for i in dec)
-                    ]
-                )
-                inp = (
-                    jnp.zeros((W, 1, 1, self.cfg.d_model), hs.dtype)
-                    .at[jnp.asarray(slots)]
-                    .set(hs)
-                )
-            out, cache = decode_masked(params_g, inp, cache, jnp.asarray(mask))
-            self.stats.decode_calls += 1
-            if last:
-                toks = np.asarray(jnp.argmax(out[:, 0, -1], axis=-1))
-                for i in dec:
-                    outputs[i] = int(toks[members[i].slot_ids[g]])
-            else:
-                for i in dec:
-                    outputs[i] = out[members[i].slot_ids[g]]
-
-        self._caches[(g, r)] = cache
-        self.stats.stage_executions += len(members)
-        for m in members:
-            m.in_call = True
-        kappa = self.pm_policy.mode(pm).kappa
-        return _StageCall(
-            members=list(members), outputs=outputs, pm=pm, slots_left=kappa
-        )
-
-    # ------------------------------------------------------------------
-    # Paged stage execution
-    # ------------------------------------------------------------------
-    def _youngest_preemptable(
-        self, g: int, r: int, protected: set[int]
-    ) -> Request | None:
-        """Newest resident holding pages on (g, r) that can be evicted:
-        not mid-call anywhere, not already part of the call being built."""
-        victims = [
-            req
-            for req in self._active
-            if req.rid not in protected
-            and not req.in_call
-            and req.replicas[g] == r
-            and req.pages[g]
-        ]
-        return max(victims, key=lambda q: q.rid, default=None)
-
-    def _preempt(self, victim: Request) -> None:
-        """Evict a resident fleet-wide and requeue it. Its prompt and
-        generated tokens are intact, so re-admission re-prefills the
-        exact context at stage 0 — preemption loses work, not tokens."""
-        for g in range(self.G):
-            self._free_slot(g, victim.replicas[g], victim)
-            self._free_pages(g, victim.replicas[g], victim)
-        self._active.remove(victim)
-        victim.replicas = None
-        victim.slot_ids = None
-        victim.cache_ready = None
-        victim.pages = None
-        victim.stage = 0
-        victim.hidden = None
-        victim.queued = True
-        self._pending.append(victim)
-        self.stats.preempted_jobs += 1
-
-    def _ensure_pages(
-        self, g: int, r: int, req: Request, need_len: int, protected: set[int]
-    ) -> bool:
-        """Grow ``req``'s page list on (g, r) to cover ``need_len``
-        entries, preempting the youngest resident on exhaustion. False =
-        defer this member to a later slot (no preemptable victim now)."""
-        pool = self._pools[(g, r)]
-        need = pool.blocks_for(need_len)
-        if need > pool.n_pages:
-            # Can never fit, even with the pool to itself: drop.
-            for gg in range(self.G):
-                self._free_slot(gg, req.replicas[gg], req)
-                self._free_pages(gg, req.replicas[gg], req)
-            self._active.remove(req)
-            req.dropped = True
-            self.stats.dropped_jobs += 1
-            return False
-        grown = False
-        while len(req.pages[g]) < need:
-            if pool.can_alloc(1):
-                req.pages[g].extend(pool.alloc(1, req.rid))
-                grown = True
-                continue
-            victim = self._youngest_preemptable(g, r, protected)
-            if victim is None:
-                return False
-            self._preempt(victim)
-        if grown:
-            self._bt_set_row(g, r, req.slot_ids[g], req.pages[g])
-        return True
-
-    def _start_call_paged(
-        self, g: int, r: int, members: list[Request]
-    ) -> _StageCall | None:
-        _, params_g = self.stages[g]
-        b = self.budgets[g][r]
-        pm = b.pm
-        prefill_pages, decode_fn = self._fns[g]
-        pool = self._pools[(g, r)]
-        lens_host = self._lens[(g, r)]
-        cache = self._caches[(g, r)]
-        last = g == self.G - 1
-        key = "tokens" if g == 0 else "hidden"
-
-        # Build prefill inputs first (their length drives page demand),
-        # then secure pages oldest-first; members that cannot get pages
-        # this slot are deferred, and _ensure_pages may preempt younger
-        # members — skip those when reached (queued/dropped flips).
-        pre_inp: dict[int, Any] = {}
+        # Build each member's work item first (prefill length drives page
+        # demand), then secure memory oldest-first; _ensure may preempt
+        # younger members — skip those when reached (queued/dropped flips).
+        plan: dict[int, tuple] = {}
+        need: dict[int, int] = {}
         for m in members:
             if m.cache_ready[g]:
-                continue
-            if g == 0:
-                ids = np.asarray(m.prompt, np.int32)
-                if m.generated:
-                    # Failover/preemption re-prefill: full prefix from the
-                    # immutable prompt + every generated token (see the
-                    # dense path for why this keeps decoding token-exact).
-                    ids = np.concatenate([ids, np.asarray(m.generated, np.int32)])
-                pre_inp[m.rid] = jnp.asarray(ids)[None, :]
+                plan[m.rid] = ("decode",)
+                need[m.rid] = int(mgr.lengths[m.slot_ids[g]]) + 1
             else:
-                # Paged decode hand-offs are [1, D] (see below); prefill
-                # inputs are [1, S, D].
-                pre_inp[m.rid] = (
-                    m.hidden if m.hidden.ndim == 3 else m.hidden[:, None]
-                )
+                if chunk is not None:
+                    # Cache the assembled stage input across chunk steps
+                    # (stage 0 re-prefill would otherwise re-concatenate
+                    # prompt + generated once per chunk — O(S^2/C) host
+                    # copying). Reset on failover/preemption via chunk_seq.
+                    if m.chunk_seq is None:
+                        m.chunk_seq = self._stage_input(m, g)
+                    seq = m.chunk_seq
+                    pos = m.chunk_pos
+                    valid = min(chunk, _seq_len(seq) - pos)
+                    plan[m.rid] = ("chunk", seq, pos, valid)
+                    need[m.rid] = pos + valid
+                else:
+                    seq = self._stage_input(m, g)
+                    inp = jnp.asarray(seq)[None, :] if g == 0 else seq
+                    plan[m.rid] = ("whole", inp)
+                    need[m.rid] = _seq_len(seq)
         served: list[Request] = []
         protected: set[int] = set()
         for m in sorted(members, key=lambda q: q.rid):
             if m.queued or m.dropped:
                 continue  # preempted/dropped by an earlier member's ensure
-            if m.cache_ready[g]:
-                need = int(lens_host[m.slot_ids[g]]) + 1
-            else:
-                need = int(pre_inp[m.rid].shape[1])
-            if self._ensure_pages(g, r, m, need, protected | {m.rid}):
+            if sched.ensure_capacity(g, r, m, need[m.rid], protected | {m.rid}):
                 served.append(m)
                 protected.add(m.rid)
         if not served:
             return None
 
-        outputs: list[Any] = [None] * len(served)
-        pre = [i for i, m in enumerate(served) if not m.cache_ready[g]]
-        dec = [i for i, m in enumerate(served) if m.cache_ready[g]]
-
-        # Prefills, grouped by prompt/handoff length (one dispatch each);
-        # the scatter lands each request's K/V in its own pages.
-        by_len: dict[int, list[int]] = {}
-        for i in pre:
-            by_len.setdefault(int(pre_inp[served[i].rid].shape[1]), []).append(i)
-        for length, idxs in sorted(by_len.items()):
-            stacked = jnp.stack([pre_inp[served[i].rid] for i in idxs])
-            nbs = pool.blocks_for(length)
-            page_ids = np.asarray(
-                [served[i].pages[g][:nbs] for i in idxs], np.int32
-            )
-            out, kp, vp = prefill_pages(
-                params_g, {key: stacked}, cache["k"], cache["v"],
-                jnp.asarray(page_ids),
-            )
-            cache = {"k": kp, "v": vp}
-            self.stats.prefill_calls += 1
-            for i in idxs:
-                lens_host[served[i].slot_ids[g]] = length
-            if last:
-                toks = np.asarray(jnp.argmax(out[:, 0, -1], axis=-1))
-                for j, i in enumerate(idxs):
-                    outputs[i] = int(toks[j])
+        outputs: list[tuple] = [None] * len(served)
+        whole_jobs, chunk_jobs, decode_jobs = [], [], []
+        for i, m in enumerate(served):
+            item = plan[m.rid]
+            if item[0] == "decode":
+                decode_jobs.append((i, m))
+            elif item[0] == "chunk":
+                chunk_jobs.append((i, m, item[1], item[2], item[3]))
             else:
-                for j, i in enumerate(idxs):
-                    outputs[i] = out[j]
+                whole_jobs.append((i, m, item[1]))
 
-        # Decode: one natively-batched paged dispatch over the slot
-        # width. Lanes marked -1 write to the scratch page and attend
-        # one masked position; their outputs are never read. The device
-        # block table is cached and refreshed only on page alloc/free.
-        if dec:
-            W = self.max_batch
-            lens_arr = np.full((W,), -1, np.int32)
-            for i in dec:
-                s = served[i].slot_ids[g]
-                lens_arr[s] = lens_host[s]
-            if (g, r) not in self._bt_dev:
-                self._bt_dev[(g, r)] = jnp.asarray(self._bt[(g, r)])
-            if g == 0:
-                buf = np.zeros((W, 1), np.int32)
-                for i in dec:
-                    buf[served[i].slot_ids[g], 0] = served[i].generated[-1]
-                inp = jnp.asarray(buf)
-            else:
-                slots = np.asarray([served[i].slot_ids[g] for i in dec], np.int32)
-                # Hand-offs: [1, D] from an upstream decode, [1, S, D]
-                # after an upstream re-prefill (consume the last position).
-                hs = jnp.stack(
-                    [
-                        m.hidden if m.hidden.ndim == 2 else m.hidden[:, -1]
-                        for m in (served[i] for i in dec)
-                    ]
-                )  # [N, 1, D]
-                inp = (
-                    jnp.zeros((W, 1, self.cfg.d_model), hs.dtype)
-                    .at[jnp.asarray(slots)]
-                    .set(hs)
-                )
-            out, cache = decode_fn(
-                params_g, inp, {"k": cache["k"], "v": cache["v"]},
-                jnp.asarray(lens_arr), self._bt_dev[(g, r)],
-            )
-            self.stats.decode_calls += 1
-            for i in dec:
-                lens_host[served[i].slot_ids[g]] += 1
-            if last:
-                toks = np.asarray(jnp.argmax(out[:, 0], axis=-1))
-                for i in dec:
-                    outputs[i] = int(toks[served[i].slot_ids[g]])
-            else:
-                # Hand-offs stay [1, D] (not dense's [1, 1, D]): the
-                # per-member [None] here costs one eagerly-dispatched
-                # expand_dims per request per stage round, which measured
-                # as a whole-percent tokens/s hit; both consumers branch
-                # on ndim instead.
-                for i in dec:
-                    outputs[i] = out[served[i].slot_ids[g]]  # [1, D]
+        ex = self._exec[g]
+        if whole_jobs:
+            ex.run_prefill_whole(r, whole_jobs, outputs, mgr)
+        if chunk_jobs:
+            ex.run_chunks(r, chunk_jobs, outputs, mgr)
+        if decode_jobs:
+            ex.run_decode(r, decode_jobs, outputs, mgr)
 
-        self._caches[(g, r)] = cache
         self.stats.stage_executions += len(served)
         for m in served:
             m.in_call = True
+        pm = self.budgets[g][r].pm
         kappa = self.pm_policy.mode(pm).kappa
         return _StageCall(members=served, outputs=outputs, pm=pm, slots_left=kappa)
 
-    def _commit(self, req: Request, out: Any, g: int) -> None:
+    # ------------------------------------------------------------------
+    # Commit
+    # ------------------------------------------------------------------
+    def _emit_token(self, req: Request, token: int) -> None:
+        req.generated.append(token)
+        if req.t_first_token is None:
+            req.t_first_token = time.perf_counter()
+        self.stats.tokens_generated += 1
+
+    def _commit(self, req: Request, out: tuple, g: int) -> None:
         """Apply a completed stage call's result to the request."""
         req.in_call = False
+        kind, value, advance = out
+        if kind == "chunk_part":
+            # Prefill continues at this stage next step; mid-pipeline
+            # chunks accumulate for the downstream handoff.
+            req.chunk_pos += advance
+            if value is not None:
+                req.chunk_outs.append(value)
+            return
+        if kind == "chunk_done":
+            req.chunk_pos = 0
+            req.chunk_seq = None
+            req.cache_ready[g] = True
+            if g == self.G - 1:
+                self._emit_token(req, value)
+            else:
+                parts = req.chunk_outs + [value]
+                req.hidden = (
+                    parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+                )
+            req.chunk_outs = []
+            self._advance(req)
+            return
         req.cache_ready[g] = True
-        if g == self.G - 1:
-            req.generated.append(out)  # already an int (batched argmax)
-            self.stats.tokens_generated += 1
+        if kind == "token":
+            self._emit_token(req, value)
         else:
-            req.hidden = out
+            req.hidden = value
         self._advance(req)
+
+    def _advance(self, req: Request) -> None:
+        req.stage += 1
+        if req.stage >= self.G:
+            if len(req.generated) >= req.n_tokens:
+                req.done = True
+                self.scheduler.release_all(req)
+                self.stats.completed_jobs += 1
+                return
+            req.stage = 0
 
     # ------------------------------------------------------------------
     # Slot loop
@@ -768,6 +839,7 @@ class PipelineServer:
     def step(self) -> None:
         """Advance one slot (the paper's Algorithm 1 outer loop)."""
         self.stats.slots += 1
+        sched = self.scheduler
         # 1) harvest + hysteresis + downtime telemetry (whole replica-slots)
         for g in range(self.G):
             for r in range(self.R):
@@ -783,51 +855,22 @@ class PipelineServer:
                 del self._calls[(g, r)]
                 for m in call.members:
                     m.in_call = False
-                    self._reroute_or_drop(m)
+                    sched.reroute_or_drop(m)
 
-        # 3) re-place idle requests whose current-stage replica died, and
-        #    parked ones (slotless after a failed failover — their old
-        #    replica may have recovered or a sibling freed up). Runs
-        #    BEFORE queue admission: in-flight work already holds slots
-        #    and pages on its other groups, so freed capacity goes to it
-        #    first — fresh admissions must not starve a parked request.
-        for req in list(self._active):
-            if req.in_call:
-                continue
-            g = req.stage
-            if not self.budgets[g][req.replicas[g]].alive or req.slot_ids[g] is None:
-                self._reroute_or_drop(req)
-
-        # 4) backpressure queue: admit while capacity allows (FIFO); a
-        #    fully dead group means queued requests have nothing to wait
-        #    for (mirrors the submit-time drop)
-        if self._pending and any(
-            not any(b.alive for b in group) for group in self.budgets
-        ):
-            while self._pending:
-                req = self._pending.popleft()
-                req.dropped = True
-                req.queued = False
-                self.stats.dropped_jobs += 1
-        while self._pending and self._try_admit(self._pending[0]):
-            self._pending.popleft()
+        # 3) re-place parked / dead-replica requests, BEFORE queue
+        #    admission (in-flight work must not be starved by fresh
+        #    arrivals), then 4) drain the backpressure queue (FIFO).
+        sched.replace_parked()
+        sched.admit_pending()
 
         # 5) start one batched call per idle, energy-ready replica
         for g in range(self.G):
             for r in range(self.R):
                 if (g, r) in self._calls:
                     continue
-                b = self.budgets[g][r]
-                if not b.available or not b.can_start():
+                if not sched.can_start(g, r):
                     continue  # power saving / energy gate: jobs held
-                members = [
-                    req
-                    for req in self._active
-                    if req.stage == g
-                    and req.replicas[g] == r
-                    and not req.in_call
-                    and req.slot_ids[g] is not None  # parked: awaiting re-place
-                ]
+                members = sched.select_members(g, r)
                 if members:
                     call = self._start_call(g, r, members)
                     if call is not None:  # paged: every member deferred
@@ -847,56 +890,6 @@ class PipelineServer:
                 for m, out in zip(call.members, call.outputs):
                     self._commit(m, out, g)
 
-    def _reroute_or_drop(self, req: Request) -> None:
-        """Failure handling: shift the in-flight stage to a sibling.
-
-        The failed replica held this stage's slot and KV cache: both are
-        lost and the sibling re-prefills. Stage 0 reconstructs its full
-        context from the immutable prompt + generated tokens; deeper
-        stages would need the prefix re-driven through the pipeline — the
-        engine approximates by restarting them from the latest hidden
-        handoff (documented context loss under failure).
-        """
-        g = req.stage
-        self._free_slot(g, req.replicas[g], req)
-        self._free_pages(g, req.replicas[g], req)  # cache on the dead node is lost
-        req.slot_ids[g] = None
-        if not any(b.alive for b in self.budgets[g]):
-            # The whole group is gone: nothing to fail over to.
-            req.dropped = True
-            for gg in range(self.G):
-                self._free_slot(gg, req.replicas[gg], req)
-                self._free_pages(gg, req.replicas[gg], req)
-            self._active.remove(req)
-            self.stats.dropped_jobs += 1
-            return
-        try:
-            new_r = self.router.reroute(self.budgets, g, free_slots=self._free_counts())
-        except RouteError:
-            # Live siblings exist but are momentarily full / power-saving:
-            # the request stays parked (slotless) and the re-place is
-            # retried every slot until a sibling slot frees up. Its old
-            # slot was released above, so the stage cache is gone.
-            req.cache_ready[g] = False
-            return
-        req.replicas[g] = new_r
-        req.slot_ids[g] = self._alloc_slot(g, new_r, req.rid)
-        req.cache_ready[g] = False
-        self.stats.rerouted_stages += 1
-
-    def _advance(self, req: Request) -> None:
-        req.stage += 1
-        if req.stage >= self.G:
-            if len(req.generated) >= req.n_tokens:
-                req.done = True
-                for g in range(self.G):
-                    self._free_slot(g, req.replicas[g], req)
-                    self._free_pages(g, req.replicas[g], req)
-                self._active.remove(req)
-                self.stats.completed_jobs += 1
-                return
-            req.stage = 0
-
     # ------------------------------------------------------------------
     def fail_replica(self, g: int, r: int) -> None:
         self.budgets[g][r].fail()
@@ -906,7 +899,16 @@ class PipelineServer:
 
     @property
     def queue_depth(self) -> int:
-        return len(self._pending)
+        return len(self.scheduler.pending)
+
+    @property
+    def _active(self) -> list[Request]:
+        """The scheduler's resident set (shared reference)."""
+        return self.scheduler.active
+
+    @property
+    def _pending(self):
+        return self.scheduler.pending
 
     def run(
         self,

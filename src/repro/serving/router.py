@@ -5,12 +5,15 @@ Given the per-replica budgets of each pipeline group, the router returns
 which replica serves each stage of a new request, using uniform /
 long-term / adaptive scheduling (:mod:`repro.core.policies`). With the
 continuous-batching engine the router is also capacity aware: callers
-pass per-replica headroom weights through ``free_slots`` — free batch
-slots for the dense engine, free KV-cache *pages* for the paged engine
-(``PipelineServer._free_counts``) — and the routing mass shifts toward
-replicas with headroom (zero headroom gets zero mass), so
-``PipelineServer.submit`` can backpressure into a pending queue instead
-of dropping when the fleet is momentarily full.
+pass per-replica headroom weights through ``free_slots`` — each cache
+manager's ``capacity_weight`` (free batch slots for ``DenseSlotCache``,
+free KV-cache *pages* for ``PagedKVCache``), collected by
+``StepScheduler.free_counts`` — and the routing mass shifts toward
+replicas with headroom. Zero headroom gets zero mass; when *every*
+replica in a group has zero headroom the group's vector stays an
+unnormalized zero vector, so ``route``/``reroute`` raise
+:class:`RouteError` and the scheduler backpressures into its pending
+queue instead of dropping.
 """
 
 from __future__ import annotations

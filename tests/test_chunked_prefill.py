@@ -1,0 +1,224 @@
+"""Chunked-prefill tests: token-exactness vs whole-prompt prefill (dense
+and paged, including failover re-prefill mid-chunk and preemption), the
+model-level chunk step vs monolithic prefill, the registry sweep over
+every paged-capable architecture, and the compile-count regression —
+with ``prefill_chunk`` set, the number of traced prefill computations is
+independent of the number of distinct prompt lengths in the workload."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import direct_greedy, tiny_model
+
+from repro.configs import ARCH_NAMES, get_smoke_config
+from repro.models import build_model, init_from_template
+from repro.models.transformer import supports_paged
+from repro.serving import PipelineServer, reset_trace_counts, trace_counts
+
+
+def _drain(server, reqs, limit=2000):
+    for _ in range(limit):
+        if all(r.done for r in reqs):
+            return
+        server.step()
+    raise AssertionError("workload did not drain")
+
+
+def _chunk_trace_keys():
+    return sorted(k for k in trace_counts() if k[0] in ("chunk", "chunk_paged"))
+
+
+class TestChunkModelEntryPoint:
+    def test_chunk_steps_match_whole_prefill(self):
+        """Driving transformer.prefill_chunk chunk-by-chunk reproduces
+        prefill's cache and final-position logits exactly."""
+        cfg, model, params = tiny_model()
+        max_len, S, C = 32, 11, 4
+        prompt = jnp.asarray((np.arange(S) * 5 + 2) % cfg.vocab_size)[None]
+        ref_logits, ref_cache = model.prefill(params, {"tokens": prompt}, max_len)
+
+        cache = jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype), model.cache_shapes(1, max_len)
+        )
+        pos = 0
+        while pos < S:
+            valid = min(C, S - pos)
+            buf = jnp.zeros((1, C), jnp.int32).at[:, :valid].set(
+                prompt[:, pos : pos + valid]
+            )
+            out, cache = model.prefill_chunk(params, {"tokens": buf}, cache, pos, valid)
+            pos += valid
+        assert int(cache["len"]) == S == int(ref_cache["len"])
+        # Valid cache entries match (beyond S is scratch in both layouts).
+        np.testing.assert_allclose(
+            np.asarray(cache["c0"]["k"][:, :, :S]),
+            np.asarray(ref_cache["c0"]["k"][:, :, :S]),
+            rtol=2e-4, atol=2e-4,
+        )
+        # Last valid chunk position's logits == prefill's final logits.
+        np.testing.assert_allclose(
+            np.asarray(out[:, valid - 1]),
+            np.asarray(ref_logits[:, -1]),
+            rtol=2e-4, atol=2e-4,
+        )
+
+    def test_chunked_requires_uniform_attention(self):
+        cfg, model, params = tiny_model("hymba-1.5b")
+        assert model.prefill_chunk is None
+        with pytest.raises(ValueError, match="chunked prefill"):
+            PipelineServer(
+                model, params, n_groups=1, n_replicas=1, prefill_chunk=4
+            )
+
+
+class TestChunkedServing:
+    @pytest.mark.parametrize("paged", [False, True])
+    @pytest.mark.parametrize("chunk", [3, 16])
+    def test_token_exact_vs_whole_prefill(self, paged, chunk):
+        """Acceptance: chunked prefill is token-exact vs whole-prompt
+        prefill (and vs monolithic greedy) for mixed prompt lengths —
+        multi-chunk, exact-multiple, and single-chunk prompts."""
+        cfg, model, params = tiny_model()
+        n_tok = 3
+        prompts = [
+            (np.arange(L) * 3 + i) % cfg.vocab_size
+            for i, L in enumerate([5, 6, 7, 11])
+        ]
+
+        def serve(prefill_chunk):
+            server = PipelineServer(
+                model, params, n_groups=2, n_replicas=1,
+                harvest_bounds=(50.0, 60.0), max_len=64, max_batch=4,
+                paged=paged, page_size=8, prefill_chunk=prefill_chunk, seed=5,
+            )
+            reqs = [server.submit(p, n_tokens=n_tok) for p in prompts]
+            _drain(server, reqs)
+            return server, reqs
+
+        w_server, w_reqs = serve(None)
+        c_server, c_reqs = serve(chunk)
+        for w, c, p in zip(w_reqs, c_reqs, prompts):
+            assert c.generated == w.generated
+            assert c.generated == direct_greedy(model, params, p, n_tok)
+        # Chunking replaces per-length prefill dispatches entirely. Decode
+        # dispatch counts may differ (prompts finish prefill on different
+        # steps, desynchronizing decode rounds) but every token still
+        # arrives, as asserted above.
+        assert c_server.stats.prefill_calls == 0
+        assert c_server.stats.chunk_prefill_calls > 0
+        assert w_server.stats.chunk_prefill_calls == 0
+
+    @pytest.mark.parametrize("paged", [False, True])
+    def test_failover_mid_chunk_token_exact(self, paged):
+        """Acceptance: killing the replica while a prompt is only
+        partially prefilled (mid-chunk) restarts the chunk stream on the
+        sibling and stays token-exact."""
+        cfg, model, params = tiny_model()
+        server = PipelineServer(
+            model, params, n_groups=2, n_replicas=3,
+            harvest_bounds=(50.0, 60.0), max_len=64, max_batch=2,
+            paged=paged, page_size=8, prefill_chunk=3, seed=4,
+        )
+        prompt = np.arange(11) % cfg.vocab_size
+        req = server.submit(prompt, n_tokens=4)
+        kills = 0
+        for _ in range(800):
+            if req.done:
+                break
+            if kills < 2 and req.chunk_pos > 0 and not req.cache_ready[req.stage]:
+                server.fail_replica(req.stage, req.replicas[req.stage])
+                kills += 1
+            server.step()
+        assert req.done and kills == 2
+        assert server.stats.rerouted_stages >= 2
+        assert req.generated == direct_greedy(model, params, prompt, 4)
+        np.testing.assert_array_equal(req.prompt, prompt)
+
+    def test_preemption_with_chunked_prefill(self):
+        """Page exhaustion mid-chunk-stream preempts the youngest and
+        still finishes token-exact; pages stay conserved."""
+        cfg, model, params = tiny_model()
+        server = PipelineServer(
+            model, params, n_groups=1, n_replicas=1,
+            harvest_bounds=(50.0, 60.0), max_len=64, max_batch=4,
+            paged=True, page_size=4, max_pages=6, prefill_chunk=3, seed=0,
+        )
+        prompts = [(np.arange(6) + i) % cfg.vocab_size for i in range(3)]
+        reqs = [server.submit(p, n_tokens=12) for p in prompts]
+        for _ in range(4000):
+            if all(r.done for r in reqs):
+                break
+            server.step()
+            for mgr in server.managers.values():
+                mgr.check_conservation()
+        assert all(r.done for r in reqs)
+        assert server.stats.preempted_jobs > 0
+        assert server.stats.dropped_jobs == 0
+        for r, p in zip(reqs, prompts):
+            assert r.generated == direct_greedy(model, params, p, 12)
+        for mgr in server.managers.values():
+            assert mgr.pool.free_pages == mgr.pool.n_pages
+
+    @pytest.mark.parametrize("paged", [False, True])
+    def test_compile_count_independent_of_prompt_lengths(self, paged):
+        """Satellite: with ``prefill_chunk`` set, the traced prefill
+        computations (``trace_counts``) do not grow with the number of
+        distinct prompt lengths — one length and four lengths compile
+        the identical set of chunk shapes, and nothing else."""
+        cfg, model, params = tiny_model()
+
+        def serve(lens):
+            server = PipelineServer(
+                model, params, n_groups=2, n_replicas=1,
+                harvest_bounds=(50.0, 60.0), max_len=64, max_batch=4,
+                paged=paged, page_size=8, prefill_chunk=4, seed=5,
+            )
+            reqs = [
+                server.submit((np.arange(L) + i) % cfg.vocab_size, n_tokens=2)
+                for i, L in enumerate(lens)
+            ]
+            _drain(server, reqs)
+
+        reset_trace_counts()
+        serve([7, 7, 7, 7])  # one distinct prompt length
+        uniform = _chunk_trace_keys()
+        whole_kind = [
+            k for k in trace_counts() if k[0] in ("prefill", "prefill_pages")
+        ]
+        assert not whole_kind  # chunking fully replaced per-length prefill
+        reset_trace_counts()
+        serve([3, 7, 9, 14])  # four distinct prompt lengths
+        mixed = _chunk_trace_keys()
+        assert mixed == uniform  # same traces, regardless of length mix
+        # One chunk shape per pipeline stage, total.
+        assert len(mixed) == 2
+
+
+@pytest.mark.slow
+class TestChunkedRegistrySweep:
+    """Acceptance: token-exactness swept over every registry model with
+    ``supports_paged`` (the chunked-prefill coverage), dense and paged."""
+
+    @pytest.mark.parametrize("name", ARCH_NAMES)
+    def test_registry_chunked_token_exact(self, name):
+        cfg = dataclasses.replace(
+            get_smoke_config(name), dtype="float32", param_dtype="float32"
+        )
+        if not supports_paged(cfg):
+            pytest.skip(f"{name}: no uniform full attention; serves unchunked")
+        model = build_model(cfg)
+        params = init_from_template(model.template, jax.random.PRNGKey(0), "float32")
+        prompt = (np.arange(9) * 2 + 1) % cfg.vocab_size
+        ref = direct_greedy(model, params, prompt, 3)
+        for paged in (False, True):
+            server = PipelineServer(
+                model, params, n_groups=2, n_replicas=1,
+                harvest_bounds=(50.0, 60.0), max_len=64, max_batch=2,
+                paged=paged, page_size=8, prefill_chunk=4, seed=1,
+            )
+            req = server.submit(prompt, n_tokens=3)
+            _drain(server, [req])
+            assert req.generated == ref, (name, paged)

@@ -7,7 +7,74 @@ import numpy as np
 import pytest
 from conftest import direct_greedy, tiny_model
 
-from repro.serving import PageError, PagePool, PipelineServer
+from repro.serving import (
+    DenseSlotCache,
+    PagedKVCache,
+    PageError,
+    PagePool,
+    PipelineServer,
+)
+
+
+class TestCacheManagers:
+    """The KVCacheManager contract both engines schedule against."""
+
+    def test_dense_is_one_page_per_slot(self):
+        mgr = DenseSlotCache(n_slots=2, max_len=32)
+        assert mgr.fits(32) and not mgr.fits(33)
+        assert mgr.capacity_weight() == 2
+        s0 = mgr.reserve(7, 10)
+        assert mgr.capacity_weight() == 1
+        # Dense extending never fails within max_len...
+        assert mgr.try_extend(7, s0, 32)
+        # ...and a context submit should have rejected raises loudly.
+        with pytest.raises(PageError):
+            mgr.try_extend(7, s0, 33)
+        s1 = mgr.reserve(8, 4)
+        assert not mgr.can_reserve(1)  # full
+        mgr.release(7, s0)
+        mgr.release(8, s1)
+        assert mgr.capacity_weight() == 2
+        mgr.check_conservation()
+
+    def test_paged_reserve_extend_release(self):
+        mgr = PagedKVCache(n_slots=4, max_len=64, page_size=4, n_pages=6)
+        slot = mgr.reserve(1, 9)  # 3 pages
+        assert mgr.held(1) == 3
+        assert mgr.capacity_weight() == 3
+        assert mgr.try_extend(1, slot, 12)  # still 3 pages
+        assert mgr.held(1) == 3
+        assert mgr.try_extend(1, slot, 13)  # grows to 4
+        assert mgr.held(1) == 4
+        slot2 = mgr.reserve(2, 8)  # takes the last 2 pages
+        assert not mgr.try_extend(1, slot, 17)  # pool exhausted -> preempt
+        mgr.release(2, slot2)
+        assert mgr.try_extend(1, slot, 17)
+        # Block-table row names exactly the held pages, scratch elsewhere.
+        row = mgr.block_table[slot]
+        assert sorted(row[: mgr.held(1)]) == sorted(mgr.pages[1])
+        assert (row[mgr.held(1):] == mgr.pool.scratch).all()
+        mgr.release(1, slot)
+        assert mgr.pool.free_pages == mgr.pool.n_pages
+        mgr.check_conservation()
+
+    def test_paged_slot_only_reservation(self):
+        """Failover re-placement reserves the slot with zero pages; the
+        memory grows lazily at call time."""
+        mgr = PagedKVCache(n_slots=2, max_len=32, page_size=4, n_pages=4)
+        slot = mgr.reserve(5, 0)
+        assert mgr.held(5) == 0
+        assert (mgr.block_table[slot] == mgr.pool.scratch).all()
+        assert mgr.try_extend(5, slot, 7)
+        assert mgr.held(5) == 2
+        mgr.release(5, slot)
+        mgr.check_conservation()
+
+    def test_paged_row_overflow_raises(self):
+        mgr = PagedKVCache(n_slots=1, max_len=16, page_size=4, n_pages=8)
+        slot = mgr.reserve(1, 4)
+        with pytest.raises(PageError):  # 17 entries > 4-page row
+            mgr.try_extend(1, slot, 17)
 
 
 class TestPagePool:
@@ -47,20 +114,21 @@ class TestPagePool:
 
 def _assert_page_invariants(server: PipelineServer):
     """Conservation + exclusivity across the whole fleet, every step."""
-    for (g, r), pool in server._pools.items():
-        pool.check_conservation()
-        held = [
-            p
+    for (g, r), mgr in server.managers.items():
+        mgr.check_conservation()  # pool conservation + single ownership
+        resident = {
+            req.rid
             for req in server._active
             if req.replicas is not None and req.replicas[g] == r
-            for p in req.pages[g]
-        ]
-        assert len(held) == len(set(held)), "page owned by two requests"
-        assert pool.used_pages == len(held), (
-            f"pool ({g},{r}) accounts {pool.used_pages} pages but residents "
-            f"hold {len(held)}"
+        }
+        owners = {rid for rid, pages in mgr.pages.items() if pages}
+        assert owners <= resident, (
+            f"manager ({g},{r}) holds pages for non-residents "
+            f"{sorted(owners - resident)}"
         )
-        assert pool.free_pages + pool.used_pages == pool.n_pages
+        held = sum(len(p) for p in mgr.pages.values())
+        assert mgr.pool.used_pages == held
+        assert mgr.pool.free_pages + mgr.pool.used_pages == mgr.pool.n_pages
 
 
 class TestPagedEngine:
@@ -93,9 +161,9 @@ class TestPagedEngine:
         # Same dispatch accounting: one paged decode per (stage, round).
         assert p_server.stats.decode_calls == d_server.stats.decode_calls
         # Fully drained fleet returns every page.
-        for pool in p_server._pools.values():
-            pool.check_conservation()
-            assert pool.free_pages == pool.n_pages
+        for mgr in p_server.managers.values():
+            mgr.check_conservation()
+            assert mgr.pool.free_pages == mgr.pool.n_pages
 
     def test_preemption_on_page_exhaustion(self):
         """A pool too small for every context preempts the youngest back
@@ -203,11 +271,12 @@ class TestPagedEngine:
             # not just the prompt.
             for req in server._active:
                 if req.generated and not any(req.cache_ready):
-                    need = server._pools[(0, 0)].blocks_for(
+                    need = server.managers[(0, 0)].pool.blocks_for(
                         len(req.prompt) + len(req.generated)
                     )
                     for g in range(server.G):
-                        assert len(req.pages[g]) >= need
+                        mgr = server.managers[(g, req.replicas[g])]
+                        assert mgr.held(req.rid) >= need
         assert all(r.done for r in reqs)
         assert server.stats.preempted_jobs > 0
 
@@ -231,9 +300,9 @@ class TestPagedEngine:
         assert req.done and fails == 2
         assert server.stats.rerouted_stages >= 2
         assert req.generated == direct_greedy(model, params, prompt, 5)
-        for pool in server._pools.values():
-            pool.check_conservation()
-            assert pool.free_pages == pool.n_pages
+        for mgr in server.managers.values():
+            mgr.check_conservation()
+            assert mgr.pool.free_pages == mgr.pool.n_pages
 
     def test_paged_requires_uniform_full_attention(self):
         cfg, model, params = tiny_model("hymba-1.5b")
@@ -308,7 +377,7 @@ class TestPagedLifecycleFuzz:
             server.step()
             _assert_page_invariants(server)
         assert not server._active and not server._pending
-        for pool in server._pools.values():
-            assert pool.free_pages == pool.n_pages
+        for mgr in server.managers.values():
+            assert mgr.pool.free_pages == mgr.pool.n_pages
         stats = server.stats
         assert stats.submitted == stats.completed_jobs + stats.dropped_jobs

@@ -119,6 +119,41 @@ class TestRouter:
         with pytest.raises(RouteError):
             r.route(budgets, free_slots=[[0, 0, 0]])
 
+    def test_all_zero_headroom_returns_unnormalized_zero_mass(self):
+        """When every replica in a group has zero headroom the group's
+        vector must stay an unnormalized all-zeros (NOT renormalized to
+        uniform): callers detect sum == 0 and queue the request."""
+        r = Router(policy="adaptive", seed=0)
+        budgets = self._budgets([60.0, 80.0, 90.0], G=2)
+        probs = r.probabilities(budgets, free_slots=[[0, 0, 0], [1, 1, 1]])
+        np.testing.assert_array_equal(probs[0], [0.0, 0.0, 0.0])
+        assert probs[0].sum() == 0.0  # unnormalized: full group = no mass
+        assert probs[1].sum() == pytest.approx(1.0)
+        with pytest.raises(RouteError):
+            r.route(budgets, free_slots=[[0, 0, 0], [1, 1, 1]])
+        with pytest.raises(RouteError):
+            r.reroute(budgets, 0, free_slots=[[0, 0, 0], [1, 1, 1]])
+
+    def test_mixed_free_slot_dtypes_do_not_change_distribution(self):
+        """Headroom weights arrive as python ints (dense free slots),
+        numpy ints of various widths (paged free pages) or floats; the
+        distribution must be identical across all of them."""
+        r = Router(policy="adaptive", seed=0)
+        budgets = self._budgets([50.0, 80.0, 80.0])
+        ref = r.probabilities(budgets, free_slots=[[1, 2, 4]])[0]
+        variants = [
+            [[1.0, 2.0, 4.0]],
+            [[np.int32(1), np.int64(2), np.int32(4)]],
+            [np.array([1, 2, 4], dtype=np.int16)],
+            [np.array([1.0, 2.0, 4.0], dtype=np.float32)],
+            [[True, 2.0, np.uint8(4)]],  # bool/np-scalar soup
+        ]
+        for fs in variants:
+            np.testing.assert_allclose(
+                r.probabilities(budgets, free_slots=fs)[0], ref
+            )
+        assert ref.sum() == pytest.approx(1.0)
+
 
 class TestEngine:
     def test_generates_tokens(self):
