@@ -27,7 +27,6 @@ the JSON rewrite.
 from __future__ import annotations
 
 import argparse
-import json
 import pathlib
 import time
 
@@ -35,7 +34,7 @@ import numpy as np
 
 from repro.serving import PipelineServer, reset_trace_counts, trace_counts
 
-from .common import csv_row, smoke_serving_model as _model
+from .common import csv_row, smoke_serving_model as _model, write_bench
 
 BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_chunked.json"
 
@@ -153,7 +152,7 @@ def run(smoke: bool = False) -> list[str]:
             )
         )
     if not smoke:
-        BENCH_JSON.write_text(json.dumps(report, indent=2) + "\n")
+        write_bench(BENCH_JSON, "chunked_prefill", report)
     return rows
 
 

@@ -14,11 +14,52 @@ per-figure arrival parameters. We use:
 from __future__ import annotations
 
 import dataclasses
+import json
+import pathlib
+import subprocess
 import time
 
 import numpy as np
 
 from repro.core.simulator import SimConfig, scenario_from_config, scenario_params
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# Every BENCH_*.json at the repo root shares this envelope so
+# ``benchmarks/run.py --summary`` can aggregate the perf trajectory and
+# ``tests/test_bench_schema.py`` can validate every record (tier-1).
+BENCH_SCHEMA_KEYS = ("name", "commit", "metrics")
+
+
+def _git_commit() -> str:
+    # --dirty: a record produced from an uncommitted tree must not be
+    # attributed to the clean commit it happens to sit on.
+    try:
+        return subprocess.check_output(
+            ["git", "describe", "--always", "--dirty"],
+            cwd=REPO_ROOT, text=True, stderr=subprocess.DEVNULL,
+        ).strip()
+    except Exception:
+        return "unknown"
+
+
+def bench_envelope(name: str, metrics: dict) -> dict:
+    """The common BENCH_*.json envelope: {name, commit, metrics{}}."""
+    return {"name": name, "commit": _git_commit(), "metrics": metrics}
+
+
+def write_bench(path: pathlib.Path, name: str, metrics: dict) -> None:
+    path.write_text(json.dumps(bench_envelope(name, metrics), indent=2) + "\n")
+
+
+def drain_requests(server, reqs, limit: int = 200_000) -> None:
+    """Step the server until every request is done or dropped."""
+    steps = 0
+    while not all(r.done or r.dropped for r in reqs):
+        server.step()
+        steps += 1
+        if steps > limit:  # pragma: no cover
+            raise RuntimeError("workload did not drain")
 
 
 def timed(fn, *args, repeat: int = 3, **kw):

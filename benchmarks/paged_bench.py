@@ -17,7 +17,6 @@ Two claims, recorded in ``BENCH_paged.json``:
 from __future__ import annotations
 
 import argparse
-import json
 import pathlib
 import time
 
@@ -26,7 +25,12 @@ import numpy as np
 
 from repro.serving import PipelineServer
 
-from .common import csv_row, smoke_serving_model as _model
+from .common import (
+    csv_row,
+    drain_requests as _drain,
+    smoke_serving_model as _model,
+    write_bench,
+)
 
 BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_paged.json"
 
@@ -37,24 +41,28 @@ def _kv_bytes(server: PipelineServer) -> int:
     return sum(x.nbytes for x in leaves)
 
 
-def _drain(server, reqs, limit=200_000):
-    steps = 0
-    while not all(r.done or r.dropped for r in reqs):
-        server.step()
-        steps += 1
-        if steps > limit:  # pragma: no cover
-            raise RuntimeError("workload did not drain")
-
-
 def capacity_at_equal_memory(
-    *, n_requests: int, n_tokens: int, prompt_len: int
+    *, n_requests: int, n_tokens: int, prompt_len: int,
+    kv_dtype: str | None = None,
 ) -> dict:
     """Dense (max_batch=4, max_len=128) vs paged with the same pool
-    bytes — max_pages = 4 * 128 / page_size minus one so the reserved
-    scratch page is counted inside the budget — but 16 admission slots."""
+    BYTES — the page budget is the dense fp32 reservation's bytes
+    divided by the actual per-page cost (``kv_page_bytes``, so int8
+    pages fit ~4x as many in the same budget), minus one so the
+    reserved scratch page is counted inside it — but 16 admission
+    slots."""
+    from repro.serving import kv_page_bytes
+
     cfg, model, params = _model()
     page_size = 16
     dense_batch, max_len = 4, 128
+    budget = (dense_batch * max_len // page_size) * kv_page_bytes(
+        page_size, cfg.n_kv_heads, cfg.head_dim, cfg.n_layers, "float32"
+    )
+    max_pages = budget // kv_page_bytes(
+        page_size, cfg.n_kv_heads, cfg.head_dim, cfg.n_layers,
+        kv_dtype or "float32",
+    ) - 1
     kw = dict(
         n_groups=2, n_replicas=1, policy="uniform",
         harvest_bounds=(60.0, 80.0), max_len=max_len, seed=0,
@@ -66,8 +74,8 @@ def capacity_at_equal_memory(
         else:
             server = PipelineServer(
                 model, params, max_batch=16, paged=True,
-                page_size=page_size,
-                max_pages=dense_batch * max_len // page_size - 1, **kw
+                page_size=page_size, kv_dtype=kv_dtype,
+                max_pages=max_pages, **kw
             )
         reqs = [
             server.submit((np.arange(prompt_len) + i) % cfg.vocab_size, n_tokens)
@@ -89,7 +97,7 @@ def capacity_at_equal_memory(
 
 def throughput_at_batch(
     batch: int, *, n_requests: int, n_tokens: int, prompt_len: int,
-    repeat: int = 3,
+    repeat: int = 3, kv_dtype: str | None = None,
 ) -> dict:
     """Steady-state tokens/s for the same workload, dense vs paged,
     equal max_batch. A full warmup wave is drained first on the same
@@ -113,7 +121,11 @@ def throughput_at_batch(
 
     out = {}
     for mode in ("dense", "paged"):
-        extra = dict(paged=True, page_size=16) if mode == "paged" else {}
+        extra = (
+            dict(paged=True, page_size=16, kv_dtype=kv_dtype)
+            if mode == "paged"
+            else {}
+        )
         server = PipelineServer(model, params, **kw, **extra)
         wave(server)  # warmup: compiles every dispatch shape
         tokens = n_requests * n_tokens
@@ -129,12 +141,13 @@ def throughput_at_batch(
     return out
 
 
-def run(smoke: bool = False) -> list[str]:
+def run(smoke: bool = False, kv_dtype: str | None = None) -> list[str]:
     rows = []
     cap = capacity_at_equal_memory(
         n_requests=8 if smoke else 24,
         n_tokens=4 if smoke else 8,
         prompt_len=6,
+        kv_dtype=kv_dtype,
     )
     rows.append(
         csv_row(
@@ -152,6 +165,7 @@ def run(smoke: bool = False) -> list[str]:
         n_requests=8 if smoke else 16,
         n_tokens=8 if smoke else 32,
         prompt_len=6,
+        kv_dtype=kv_dtype,
     )
     rows.append(
         csv_row(
@@ -162,13 +176,13 @@ def run(smoke: bool = False) -> list[str]:
             f"ratio={tp['paged_vs_dense']}",
         )
     )
-    if not smoke:
+    if not smoke and kv_dtype is None:
         report = {
             "model": "stablelm-1.6b(smoke)",
             "capacity_at_equal_memory": cap,
             "throughput_batch16": tp,
         }
-        BENCH_JSON.write_text(json.dumps(report, indent=2) + "\n")
+        write_bench(BENCH_JSON, "paged_kv", report)
     return rows
 
 
@@ -178,8 +192,15 @@ def main() -> None:
         "--smoke", action="store_true",
         help="small CI run: fewer requests/tokens, no BENCH_paged.json",
     )
+    ap.add_argument(
+        "--kv-dtype", choices=["compute", "int8"], default="compute",
+        help="page dtype for the paged servers (int8 = quantized pages; "
+             "the CI main lane smoke-runs this path); BENCH_paged.json is "
+             "only rewritten at the default dtype",
+    )
     args = ap.parse_args()
-    for row in run(smoke=args.smoke):
+    kv = None if args.kv_dtype == "compute" else args.kv_dtype
+    for row in run(smoke=args.smoke, kv_dtype=kv):
         print(row, flush=True)
 
 

@@ -10,17 +10,72 @@ Prints ``name,us_per_call,derived`` CSV rows:
   paged  — paged vs dense KV cache: capacity + throughput (BENCH_paged.json)
   chunked — chunked vs whole-prompt prefill under mixed traffic
             (BENCH_chunked.json)
+  quant_kv — int8 vs compute-dtype KV pages: capacity at equal bytes,
+            throughput, greedy agreement (BENCH_quant_kv.json)
   sweep  — per-scenario re-jit vs one vmapped sweep (writes BENCH_sweep.json)
   roofline — per-cell dry-run roofline terms (deliverable g)
+
+``--summary`` skips the benchmarks and prints the perf trajectory
+recorded across every ``BENCH_*.json`` at the repo root (all share the
+``{name, commit, metrics{}}`` envelope from :mod:`benchmarks.common`).
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+import pathlib
 import sys
 import traceback
 
 
+def _flat_metrics(metrics, prefix="", out=None):
+    """Numeric leaves of a metrics tree as dotted keys."""
+    if out is None:
+        out = {}
+    if isinstance(metrics, dict):
+        for k, v in metrics.items():
+            _flat_metrics(v, f"{prefix}{k}.", out)
+    elif isinstance(metrics, (int, float)) and not isinstance(metrics, bool):
+        out[prefix[:-1]] = metrics
+    return out
+
+
+def summary() -> None:
+    """Print the recorded perf trajectory across all BENCH_*.json files."""
+    root = pathlib.Path(__file__).resolve().parent.parent
+    paths = sorted(root.glob("BENCH_*.json"))
+    if not paths:
+        print("no BENCH_*.json records found", file=sys.stderr)
+        return
+    for path in paths:
+        data = json.loads(path.read_text())
+        print(f"{data['name']} @ {data['commit']} ({path.name})")
+        flat = _flat_metrics(data["metrics"])
+        # Headline ratios/speedups first, then the rest, alphabetical.
+        headline = {
+            k: v for k, v in flat.items()
+            if any(t in k for t in ("speedup", "gain", "ratio", "agreement",
+                                    "_vs_"))
+        }
+        for k in sorted(headline):
+            print(f"  {k} = {headline[k]}")
+        for k in sorted(set(flat) - set(headline)):
+            print(f"  {k} = {flat[k]}")
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--summary", action="store_true",
+        help="print the perf trajectory across existing BENCH_*.json "
+             "records instead of running the benchmarks",
+    )
+    args = ap.parse_args()
+    if args.summary:
+        summary()
+        return
+
     from . import (
         chunked_bench,
         fig2a,
@@ -28,6 +83,7 @@ def main() -> None:
         fig3,
         fig4,
         paged_bench,
+        quant_kv_bench,
         roofline_table,
         serve_bench,
         sweep_bench,
@@ -43,6 +99,7 @@ def main() -> None:
         serve_bench,
         paged_bench,
         chunked_bench,
+        quant_kv_bench,
         sweep_bench,
         roofline_table,
     ):

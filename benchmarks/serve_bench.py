@@ -12,7 +12,6 @@ the sweep engine doubles as the serving fleet's capacity planner."""
 from __future__ import annotations
 
 import argparse
-import json
 import pathlib
 import time
 
@@ -22,7 +21,7 @@ from repro.core.network import paper_topology
 from repro.core.simulator import SimConfig, simulate_sweep
 from repro.serving import PipelineServer
 
-from .common import csv_row, smoke_serving_model as _model, timed
+from .common import csv_row, smoke_serving_model as _model, timed, write_bench
 
 BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_serve_batch.json"
 
@@ -148,7 +147,7 @@ def batch_sweep(
         )
     )
     if not smoke:
-        BENCH_JSON.write_text(json.dumps(report_full, indent=2) + "\n")
+        write_bench(BENCH_JSON, "serve_batch", report_full)
     return rows, report_full
 
 

@@ -16,7 +16,6 @@ bit-for-bit; the benchmark asserts that before recording timings.
 
 from __future__ import annotations
 
-import json
 import pathlib
 import time
 
@@ -28,7 +27,7 @@ from repro.core.simulator import _make_run, simulate_sweep
 
 from .common import FIG34_RUNS as N_RUNS
 from .common import FIG34_STEPS as N_STEPS
-from .common import csv_row
+from .common import csv_row, write_bench
 
 
 def _fig3_grid():
@@ -96,7 +95,7 @@ def run(write_json: bool = True) -> list[str]:
     }
     if write_json:
         out = pathlib.Path(__file__).resolve().parent.parent / "BENCH_sweep.json"
-        out.write_text(json.dumps(record, indent=2) + "\n")
+        write_bench(out, "sweep", record)
 
     return [
         csv_row(

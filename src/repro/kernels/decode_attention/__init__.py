@@ -1,6 +1,12 @@
 from .ops import decode_attention, decode_attention_ref
 from .paged import paged_decode_attention
-from .ref import gather_pages, paged_decode_attention_ref, paged_prefill_attention
+from .paged_prefill import paged_prefill_attention_pallas
+from .ref import (
+    gather_pages,
+    paged_decode_attention_ref,
+    paged_prefill_attention,
+    quantize_kv,
+)
 
 __all__ = [
     "decode_attention",
@@ -8,5 +14,7 @@ __all__ = [
     "paged_decode_attention",
     "paged_decode_attention_ref",
     "paged_prefill_attention",
+    "paged_prefill_attention_pallas",
     "gather_pages",
+    "quantize_kv",
 ]

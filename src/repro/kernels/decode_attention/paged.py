@@ -15,6 +15,11 @@ the same tiny XLA log-sum-exp combine as the dense flash-decode kernel
 Out-of-range logical blocks point at a reserved scratch page; their
 positions are masked by the per-sequence length, so their garbage
 contributes exp(-inf) = 0 to the merge.
+
+int8 pools (``kv_dtype="int8"`` serving) carry one fp32 scale per page
+row; passing ``k_scales``/``v_scales`` makes the kernel dequantize each
+fetched page in VMEM, so quantized decode reads a quarter of the fp32
+bytes and never materializes an fp copy of the cache.
 """
 
 from __future__ import annotations
@@ -35,21 +40,29 @@ def _paged_kernel(
     q_ref,  # [1, 1, G, D]
     k_ref,  # [1, page, 1, D] — the physical page named by bt[b, c]
     v_ref,
-    m_out,  # [1, 1, 1, G]
-    l_out,
-    acc_out,  # [1, 1, 1, G, D]
-    *,
+    *refs,  # ([ks_ref, vs_ref] when quantized), m_out, l_out, acc_out
     page_size: int,
     window: int | None,
     scale: float,
+    quantized: bool,
 ):
+    if quantized:
+        ks_ref, vs_ref, m_out, l_out, acc_out = refs
+    else:
+        m_out, l_out, acc_out = refs
     b = pl.program_id(0)
     ci = pl.program_id(2)
     cache_len = len_ref[b]
 
     q = q_ref[0, 0].astype(jnp.float32) * scale  # [G, D]
-    k = k_ref[0, :, 0].astype(jnp.float32)  # [page, D]
-    v = v_ref[0, :, 0].astype(jnp.float32)
+    k = k_ref[0, :, 0]  # [page, D]
+    v = v_ref[0, :, 0]
+    if quantized:
+        k = k.astype(jnp.float32) * ks_ref[0][:, None]
+        v = v.astype(jnp.float32) * vs_ref[0][:, None]
+    else:
+        k = k.astype(jnp.float32)
+        v = v.astype(jnp.float32)
 
     s = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
@@ -80,6 +93,8 @@ def paged_decode_attention(
     lengths: jax.Array,  # [B] int32 valid entries incl. current token
     *,
     window: int | None = None,
+    k_scales: jax.Array | None = None,  # [P, page] fp32 per-row scales (int8)
+    v_scales: jax.Array | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     """Single-token attention against a paged KV cache. Returns [B,1,H,D]."""
@@ -88,26 +103,35 @@ def paged_decode_attention(
     NB = block_tables.shape[1]
     G = H // KV
     scale = D**-0.5
+    quantized = k_scales is not None
 
     qg = q.reshape(B, KV, G, D)
     block_tables = block_tables.astype(jnp.int32)
     lengths = lengths.astype(jnp.int32)
 
     kernel = functools.partial(
-        _paged_kernel, page_size=page, window=window, scale=scale
+        _paged_kernel, page_size=page, window=window, scale=scale,
+        quantized=quantized,
     )
+    page_spec = pl.BlockSpec(
+        (1, page, 1, D), lambda b, h, c, bt, ln: (bt[b, c], 0, h, 0)
+    )
+    in_specs = [
+        pl.BlockSpec((1, 1, G, D), lambda b, h, c, bt, ln: (b, h, 0, 0)),
+        page_spec,
+        page_spec,
+    ]
+    operands = [qg, k_pages, v_pages]
+    if quantized:
+        scale_spec = pl.BlockSpec(
+            (1, page), lambda b, h, c, bt, ln: (bt[b, c], 0)
+        )
+        in_specs += [scale_spec, scale_spec]
+        operands += [k_scales, v_scales]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, KV, NB),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, D), lambda b, h, c, bt, ln: (b, h, 0, 0)),
-            pl.BlockSpec(
-                (1, page, 1, D), lambda b, h, c, bt, ln: (bt[b, c], 0, h, 0)
-            ),
-            pl.BlockSpec(
-                (1, page, 1, D), lambda b, h, c, bt, ln: (bt[b, c], 0, h, 0)
-            ),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, 1, G), lambda b, h, c, bt, ln: (b, h, c, 0)),
             pl.BlockSpec((1, 1, 1, G), lambda b, h, c, bt, ln: (b, h, c, 0)),
@@ -125,7 +149,7 @@ def paged_decode_attention(
             jax.ShapeDtypeStruct((B, KV, NB, G, D), jnp.float32),
         ],
         interpret=interpret,
-    )(block_tables, lengths, qg, k_pages, v_pages)
+    )(block_tables, lengths, *operands)
 
     # Log-sum-exp merge across logical blocks (tiny XLA reduction).
     M = jnp.max(m, axis=2, keepdims=True)  # [B,KV,1,G]

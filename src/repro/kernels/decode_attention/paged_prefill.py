@@ -1,0 +1,174 @@
+"""Pallas TPU paged prefill-attention kernel (block-table walk).
+
+Chunked prefill scatters each chunk's K/V into the request's reserved
+pages and then needs the chunk's C query positions to attend causally
+over the *whole* paged prefix. The XLA fallback
+(:func:`.ref.paged_prefill_attention`) materializes every lane's pages
+with one gather per chunk — O(prefix) copied bytes per chunk, the
+dominant per-token cost on memory-starved edge devices. This kernel is
+the multi-query sibling of :func:`.paged.paged_decode_attention`: the
+grid is (batch, kv_head, prefix block) and the block table is a
+*scalar-prefetch* operand, so each cell's BlockSpec ``index_map``
+resolves the logical block to its physical page and the DMA fetches
+exactly that page — the gather happens in the memory system and the
+contiguous copy never exists.
+
+The causal mask is applied in-kernel from the per-lane ``offsets``
+(query ``i`` of lane ``b`` sits at absolute position ``offsets[b] + i``
+and attends positions ``<= offsets[b] + i``); per-cell partials
+(m, l, acc) are merged by the same tiny XLA log-sum-exp combine as the
+decode kernels. Blocks entirely beyond a lane's chunk window mask to
+exp(-inf) = 0 and out-of-range logical blocks point at the pool's
+reserved scratch page, so ragged lanes cost masked lanes nothing.
+
+int8 pages (:mod:`repro.serving` ``kv_dtype="int8"``) carry one fp32
+scale per page row; the kernel dequantizes each fetched page in VMEM —
+quantized serving never materializes an fp copy of the cache either.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_prefill_kernel(
+    bt_ref,  # [B, NB] int32 scalar-prefetch: logical block -> physical page
+    off_ref,  # [B] int32 scalar-prefetch: absolute position of q[:, 0]
+    q_ref,  # [1, 1, C, G, D]
+    k_ref,  # [1, page, 1, D] — the physical page named by bt[b, c]
+    v_ref,
+    *refs,  # ([ks_ref, vs_ref] when quantized), m_out, l_out, acc_out
+    page_size: int,
+    scale: float,
+    quantized: bool,
+):
+    if quantized:
+        ks_ref, vs_ref, m_out, l_out, acc_out = refs
+    else:
+        m_out, l_out, acc_out = refs
+    b = pl.program_id(0)
+    ci = pl.program_id(2)
+    off = off_ref[b]
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # [C, G, D]
+    C, G, D = q.shape
+    k = k_ref[0, :, 0]  # [page, D]
+    v = v_ref[0, :, 0]
+    if quantized:
+        k = k.astype(jnp.float32) * ks_ref[0][:, None]
+        v = v.astype(jnp.float32) * vs_ref[0][:, None]
+    else:
+        k = k.astype(jnp.float32)
+        v = v.astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q.reshape(C * G, D), k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(C, G, page_size)
+    kv_pos = ci * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, 1, page_size), 2
+    )
+    q_pos = off + jax.lax.broadcasted_iota(jnp.int32, (C, 1, 1), 0)
+    mask = kv_pos <= q_pos  # causal incl. self, [C, 1, page]
+    s = jnp.where(mask, s, NEG_INF)
+
+    m = jnp.max(s, axis=2)  # [C, G]
+    p = jnp.where(mask, jnp.exp(s - m[:, :, None]), 0.0)
+    l = jnp.sum(p, axis=2)
+    acc = jax.lax.dot_general(
+        p.reshape(C * G, page_size), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(C, G, D)
+    m_out[0, 0, 0] = m
+    l_out[0, 0, 0] = l
+    acc_out[0, 0, 0] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_prefill_attention_pallas(
+    q: jax.Array,  # [B, C, H, D] (model layout) — C new tokens per lane
+    k_pages: jax.Array,  # [P, page, KV, D] — shared page pool
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # [B, NB] int32 physical page per logical block
+    offsets: jax.Array,  # [B] int32 absolute position of q[:, 0] (>= 0)
+    *,
+    k_scales: jax.Array | None = None,  # [P, page] fp32 per-row scales (int8)
+    v_scales: jax.Array | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Chunk attention over a paged prefix, gather-free. Returns [B,C,H,D].
+
+    Drop-in for :func:`.ref.paged_prefill_attention` (the XLA gather
+    fallback, which stays as the off-TPU path and test oracle). Rows
+    past the caller's valid count produce garbage the engine discards.
+    """
+    B, C, H, D = q.shape
+    _, page, KV, _ = k_pages.shape
+    NB = block_tables.shape[1]
+    G = H // KV
+    scale = D**-0.5
+    quantized = k_scales is not None
+
+    qg = q.reshape(B, C, KV, G, D).transpose(0, 2, 1, 3, 4)  # [B, KV, C, G, D]
+    block_tables = block_tables.astype(jnp.int32)
+    offsets = offsets.astype(jnp.int32)
+
+    kernel = functools.partial(
+        _paged_prefill_kernel, page_size=page, scale=scale, quantized=quantized
+    )
+    page_spec = pl.BlockSpec(
+        (1, page, 1, D), lambda b, h, c, bt, off: (bt[b, c], 0, h, 0)
+    )
+    in_specs = [
+        pl.BlockSpec((1, 1, C, G, D), lambda b, h, c, bt, off: (b, h, 0, 0, 0)),
+        page_spec,
+        page_spec,
+    ]
+    operands = [qg, k_pages, v_pages]
+    if quantized:
+        scale_spec = pl.BlockSpec(
+            (1, page), lambda b, h, c, bt, off: (bt[b, c], 0)
+        )
+        in_specs += [scale_spec, scale_spec]
+        operands += [k_scales, v_scales]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, NB),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec(
+                (1, 1, 1, C, G), lambda b, h, c, bt, off: (b, h, c, 0, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, 1, C, G), lambda b, h, c, bt, off: (b, h, c, 0, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, 1, C, G, D), lambda b, h, c, bt, off: (b, h, c, 0, 0, 0)
+            ),
+        ],
+    )
+    m, l, acc = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, KV, NB, C, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, KV, NB, C, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, KV, NB, C, G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(block_tables, offsets, *operands)
+
+    # Log-sum-exp merge across logical blocks (tiny XLA reduction).
+    M = jnp.max(m, axis=2, keepdims=True)  # [B,KV,1,C,G]
+    w = jnp.exp(m - M)  # [B,KV,NB,C,G]
+    denom = jnp.sum(w * l, axis=2)  # [B,KV,C,G]
+    numer = jnp.sum(w[..., None] * acc, axis=2)  # [B,KV,C,G,D]
+    out = numer / jnp.maximum(denom[..., None], 1e-30)
+    return out.transpose(0, 2, 1, 3, 4).reshape(B, C, H, D).astype(q.dtype)

@@ -1,4 +1,5 @@
-"""Pure-jnp oracles for flash-decode and paged flash-decode."""
+"""Pure-jnp oracles for flash-decode and paged flash-decode, plus the
+scatter-time int8 page quantizer shared by models and engine."""
 
 from __future__ import annotations
 
@@ -8,14 +9,41 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
-def gather_pages(pages: jnp.ndarray, block_tables: jnp.ndarray) -> jnp.ndarray:
+def quantize_kv(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-row int8 quantization of K/V cache entries.
+
+    ``x[..., KV, D]`` -> (int8 values, fp32 scales ``[...]``): one amax
+    scale per token row (all KV heads x head_dim of one cache entry).
+    Scales live per page *row*, not one scalar per page, deliberately:
+    pages fill incrementally (decode writes one row per step), and a
+    whole-page amax would force requantizing every previously written
+    row on each scatter. All-zero rows get scale 1 so dequant stays 0.
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=(-2, -1))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xf / scale[..., None, None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def gather_pages(
+    pages: jnp.ndarray,
+    block_tables: jnp.ndarray,
+    scales: jnp.ndarray | None = None,
+) -> jnp.ndarray:
     """Materialize a contiguous cache from a page pool.
 
     pages: [P, page, KV, D]; block_tables: [B, NB] -> [B, NB*page, KV, D].
+    With ``scales`` ([P, page] per-row fp32, int8 pools) the gathered
+    rows are dequantized: ``pages[bt] * scales[bt]``.
     """
     B, NB = block_tables.shape
     _, page, KV, D = pages.shape
-    return pages[block_tables].reshape(B, NB * page, KV, D)
+    out = pages[block_tables].reshape(B, NB * page, KV, D)
+    if scales is None:
+        return out
+    s = scales[block_tables].reshape(B, NB * page)
+    return out.astype(s.dtype) * s[:, :, None, None]
 
 
 def paged_decode_attention_ref(
@@ -26,11 +54,13 @@ def paged_decode_attention_ref(
     lengths: jnp.ndarray,  # [B] int32, valid entries incl. current token
     *,
     window: int | None = None,
+    k_scales: jnp.ndarray | None = None,  # [P, page] fp32 (int8 pools)
+    v_scales: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """Gather-then-attend oracle for the paged kernel. Returns [B,1,H,D]."""
     B, _, H, D = q.shape
-    k = gather_pages(k_pages, block_tables)  # [B, S, KV, D]
-    v = gather_pages(v_pages, block_tables)
+    k = gather_pages(k_pages, block_tables, k_scales)  # [B, S, KV, D]
+    v = gather_pages(v_pages, block_tables, v_scales)
     return decode_attention_ref(
         q.transpose(0, 2, 1, 3),
         k.transpose(0, 2, 1, 3),
@@ -46,23 +76,27 @@ def paged_prefill_attention(
     v_pages: jnp.ndarray,
     block_tables: jnp.ndarray,  # [B, NB] int32
     offsets: jnp.ndarray,  # [B] int32 absolute position of q[:, 0]
+    *,
+    k_scales: jnp.ndarray | None = None,  # [P, page] fp32 (int8 pools)
+    v_scales: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """Prefill-over-paged-prefix attention — the gather fallback.
 
     Chunked prefill writes each chunk's K/V into the request's reserved
     pages and then needs the chunk's queries to attend causally over the
     whole paged prefix. This fallback materializes each lane's pages
-    (one gather) and runs masked attention; a Pallas kernel that walks
-    the block table directly (the multi-query sibling of
-    :func:`repro.kernels.decode_attention.paged_decode_attention`) can
-    replace it behind the same signature. Query ``i`` of lane ``b``
-    attends positions ``<= offsets[b] + i``; rows past the caller's
-    valid count produce garbage that the engine discards. Returns
-    [B, C, H, D].
+    (one gather, dequantized for int8 pools) and runs masked attention;
+    the Pallas kernel that walks the block table directly —
+    :func:`.paged_prefill.paged_prefill_attention_pallas`, the
+    multi-query sibling of :func:`.paged.paged_decode_attention` —
+    replaces it behind this signature on TPU, and this fallback stays as
+    the off-TPU path and test oracle. Query ``i`` of lane ``b`` attends
+    positions ``<= offsets[b] + i``; rows past the caller's valid count
+    produce garbage that the engine discards. Returns [B, C, H, D].
     """
     B, C, H, D = q.shape
-    k = gather_pages(k_pages, block_tables)  # [B, S, KV, D]
-    v = gather_pages(v_pages, block_tables)
+    k = gather_pages(k_pages, block_tables, k_scales)  # [B, S, KV, D]
+    v = gather_pages(v_pages, block_tables, v_scales)
     S, KV = k.shape[1], k.shape[2]
     G = H // KV
     scale = D**-0.5

@@ -41,6 +41,17 @@ def main() -> None:
     ap.add_argument("--max-pages", type=int, default=None,
                     help="pool pages per (group, replica); default matches the "
                          "dense reservation (max_batch * ceil(max_len/page_size))")
+    ap.add_argument("--kv-dtype", choices=["compute", "int8"], default="compute",
+                    help="paged KV page dtype: 'compute' stores pages at the "
+                         "model compute dtype; 'int8' quantizes at scatter "
+                         "(per-row fp32 scales, dequantized in the page "
+                         "gather) — 4x (fp32) / 2x (bf16) fewer KV bytes per "
+                         "token, so the same pool admits more residents")
+    ap.add_argument("--max-park-steps", type=int, default=32,
+                    help="starvation-free aging: force-place (preempting the "
+                         "youngest resident of a live sibling) any failover "
+                         "victim parked slotless longer than this many slots; "
+                         "<= 0 disables aging")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="chunked prefill: split joining prompts into fixed "
                          "N-token chunks co-scheduled with decode (one compiled "
@@ -69,7 +80,9 @@ def main() -> None:
         paged=args.paged,
         page_size=args.page_size,
         max_pages=args.max_pages,
+        kv_dtype=None if args.kv_dtype == "compute" else args.kv_dtype,
         prefill_chunk=args.prefill_chunk,
+        max_park_steps=args.max_park_steps if args.max_park_steps > 0 else None,
         seed=args.seed,
     )
     stats = server.run(args.slots, arrival_p=args.arrival_p)

@@ -361,14 +361,45 @@ def attention_block(
     return o, (k_cache, v_cache)
 
 
+def _scatter_kv_pages(
+    pages: dict, k: jax.Array, v: jax.Array, write_pages, write_offs
+) -> dict:
+    """Write K/V rows into the shared pool at (write_pages, write_offs).
+
+    ``pages``: {"k", "v"} (+ {"k_scale", "v_scale"} for int8 pools —
+    the presence of scales *is* the quantization switch). k/v rows are
+    [..., KV, Dh]; int8 pools quantize each row at scatter time
+    (per-row amax, :func:`repro.kernels.decode_attention.quantize_kv`)
+    and store its fp32 scale alongside, so a row is quantized exactly
+    once and never requantized.
+    """
+    out = dict(pages)
+    if "k_scale" in pages:
+        from ..kernels.decode_attention import quantize_kv
+
+        qk, ks = quantize_kv(k)
+        qv, vs = quantize_kv(v)
+        out["k"] = pages["k"].at[write_pages, write_offs].set(qk)
+        out["v"] = pages["v"].at[write_pages, write_offs].set(qv)
+        out["k_scale"] = pages["k_scale"].at[write_pages, write_offs].set(ks)
+        out["v_scale"] = pages["v_scale"].at[write_pages, write_offs].set(vs)
+    else:
+        out["k"] = pages["k"].at[write_pages, write_offs].set(
+            k.astype(pages["k"].dtype)
+        )
+        out["v"] = pages["v"].at[write_pages, write_offs].set(
+            v.astype(pages["v"].dtype)
+        )
+    return out
+
+
 def paged_attention_block(
     x: jax.Array,
     p: dict,
     cfg: ModelConfig,
     *,
     positions: jax.Array,  # [B, 1] per-request absolute position (>= 0)
-    k_pages: jax.Array,  # [P+1, page, KV, Dh] shared pool (one layer)
-    v_pages: jax.Array,
+    pages: dict,  # {"k","v"[,"k_scale","v_scale"]} shared pool (one layer)
     block_tables: jax.Array,  # [B, NB] int32
     write_pages: jax.Array,  # [B] physical page for this token's K/V
     write_offs: jax.Array,  # [B] offset within that page
@@ -380,34 +411,36 @@ def paged_attention_block(
     token's K/V land at (write_pages, write_offs), precomputed by
     :func:`repro.models.transformer.decode_step_paged` (layer-invariant;
     masked lanes point at the pool's scratch page so a batched scatter
-    never corrupts a live page). Returns (out [B,1,D], (k_pages,
-    v_pages)).
+    never corrupts a live page). int8 pools (``k_scale`` present)
+    quantize at scatter and dequantize inside the page gather — kernel
+    and fallback alike. Returns (out [B,1,D], updated pages).
     """
     dtype = cfg.compute_dtype
     q, k, v = _project_qkv(x, p, cfg, positions)
-    k_pages = k_pages.at[write_pages, write_offs].set(k[:, 0].astype(k_pages.dtype))
-    v_pages = v_pages.at[write_pages, write_offs].set(v[:, 0].astype(v_pages.dtype))
+    pages = _scatter_kv_pages(pages, k[:, 0], v[:, 0], write_pages, write_offs)
     attn_len = positions[:, 0] + 1  # valid entries incl. the new token
     if cfg.attn_impl == "pallas":
         from ..kernels.decode_attention import paged_decode_attention
 
         out = paged_decode_attention(
-            q, k_pages, v_pages, block_tables, attn_len,
+            q, pages["k"], pages["v"], block_tables, attn_len,
+            k_scales=pages.get("k_scale"), v_scales=pages.get("v_scale"),
             interpret=_use_interpret(),
         )
     else:
-        # XLA path: gather the pages, then the dense decode oracle with
-        # per-request lengths ([B,1] broadcasts against the position row).
+        # XLA path: gather the pages (dequantizing int8 rows), then the
+        # dense decode oracle with per-request lengths ([B,1] broadcasts
+        # against the position row).
         from ..kernels.decode_attention import gather_pages
 
-        k_cache = gather_pages(k_pages, block_tables)
-        v_cache = gather_pages(v_pages, block_tables)
+        k_cache = gather_pages(pages["k"], block_tables, pages.get("k_scale"))
+        v_cache = gather_pages(pages["v"], block_tables, pages.get("v_scale"))
         out = decode_attention(
             q, k_cache, v_cache, attn_len[:, None],
             mulsum=cfg.decode_mulsum, kv_stream=cfg.attn_kv_stream,
         )
     o = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dtype))
-    return o, (k_pages, v_pages)
+    return o, pages
 
 
 def chunk_attention_block(
@@ -454,8 +487,7 @@ def paged_chunk_attention_block(
     cfg: ModelConfig,
     *,
     positions: jax.Array,  # [B, C] absolute position per chunk token
-    k_pages: jax.Array,  # [P+1, page, KV, Dh] shared pool (one layer)
-    v_pages: jax.Array,
+    pages: dict,  # {"k","v"[,"k_scale","v_scale"]} shared pool (one layer)
     block_tables: jax.Array,  # [B, NB] int32
     write_pages: jax.Array,  # [B, C] physical page per chunk token
     write_offs: jax.Array,  # [B, C] offset within that page
@@ -465,18 +497,32 @@ def paged_chunk_attention_block(
     The paged sibling of :func:`chunk_attention_block`: the chunk's K/V
     are scattered into each request's reserved pages (masked lanes and
     padding positions land on the scratch page, precomputed by
-    :func:`repro.models.transformer.prefill_chunk_paged`), then the
-    chunk attends over the paged prefix via the gather fallback in
-    :mod:`repro.kernels.decode_attention` — a Pallas
-    prefill-over-paged-prefix kernel can replace it without touching
-    this call site. Returns (out [B, C, D], (k_pages, v_pages)).
+    :func:`repro.models.transformer.prefill_chunk_paged`; int8 pools
+    quantize per row at scatter), then the chunk attends over the paged
+    prefix. On the Pallas path that is
+    :func:`repro.kernels.decode_attention.paged_prefill_attention_pallas`
+    — the block-table walk happens in the kernel's DMA index map, so no
+    contiguous copy of the prefix is ever materialized; off TPU the
+    gather fallback computes the identical masked softmax. Returns
+    (out [B, C, D], updated pages).
     """
     dtype = cfg.compute_dtype
     q, k, v = _project_qkv(x, p, cfg, positions)
-    k_pages = k_pages.at[write_pages, write_offs].set(k.astype(k_pages.dtype))
-    v_pages = v_pages.at[write_pages, write_offs].set(v.astype(v_pages.dtype))
-    from ..kernels.decode_attention import paged_prefill_attention
+    pages = _scatter_kv_pages(pages, k, v, write_pages, write_offs)
+    if cfg.attn_impl == "pallas":
+        from ..kernels.decode_attention import paged_prefill_attention_pallas
 
-    out = paged_prefill_attention(q, k_pages, v_pages, block_tables, positions[:, 0])
+        out = paged_prefill_attention_pallas(
+            q, pages["k"], pages["v"], block_tables, positions[:, 0],
+            k_scales=pages.get("k_scale"), v_scales=pages.get("v_scale"),
+            interpret=_use_interpret(),
+        )
+    else:
+        from ..kernels.decode_attention import paged_prefill_attention
+
+        out = paged_prefill_attention(
+            q, pages["k"], pages["v"], block_tables, positions[:, 0],
+            k_scales=pages.get("k_scale"), v_scales=pages.get("v_scale"),
+        )
     o = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dtype))
-    return o, (k_pages, v_pages)
+    return o, pages

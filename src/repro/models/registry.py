@@ -19,6 +19,10 @@ slot addresses it through a block table, so the step is natively batched
 (vmap cannot thread a shared mutable pool through independent lanes).
 ``None`` for families the pager does not cover (encdec, SSM, hybrid,
 sliding-window) — :func:`repro.models.transformer.supports_paged`.
+The pools dict is dtype-parametric: int8 pools carry per-row fp32
+``k_scale``/``v_scale`` arrays alongside ``k``/``v`` (quantized at
+scatter, dequantized inside the page gather) and flow through the same
+entry points unchanged.
 
 ``prefill_chunk`` / ``prefill_chunk_batch`` / ``prefill_chunk_paged``
 are the chunked-prefill entry points (Sarathi-style): a fixed-width

@@ -536,8 +536,10 @@ def decode_step_paged(
     write coordinates are derived in-graph.
 
     token: [W, 1] ids (stage 0) or hidden [W, 1, D] (later stages);
-    pools: {"k": [n_layers, P+1, page, KV, Dh], "v": ...}.
-    Returns (logits/hidden [W, 1, V|D], updated pools).
+    pools: {"k": [n_layers, P+1, page, KV, Dh], "v": ...} — int8 pools
+    additionally carry {"k_scale", "v_scale": [n_layers, P+1, page]}
+    per-row fp32 scales (quantized at scatter, dequantized in the page
+    gather). Returns (logits/hidden [W, 1, V|D], updated pools).
     """
     if not supports_paged(cfg):
         raise ValueError(f"{cfg.name}: paged decode needs uniform full attention")
@@ -558,21 +560,21 @@ def decode_step_paged(
     p_run = params["classes"]["c0"]
 
     def body(x, scanned):
-        p_layer, kp, vp = scanned
+        p_layer, pages = scanned
         h = rmsnorm(x, p_layer["ln1"], cfg.rms_eps)
-        a, (kp, vp) = paged_attention_block(
+        a, pages = paged_attention_block(
             h, p_layer["attn"], cfg,
-            positions=positions, k_pages=kp, v_pages=vp,
+            positions=positions, pages=pages,
             block_tables=block_tables,
             write_pages=write_pages, write_offs=write_offs,
         )
         x = x + a
         h2 = rmsnorm(x, p_layer["ln2"], cfg.rms_eps)
         ff, _ = _ffn(h2, p_layer, cfg)
-        return x + ff, (kp, vp)
+        return x + ff, pages
 
-    x, (kp, vp) = jax.lax.scan(body, x, (p_run, pools["k"], pools["v"]))
-    return _unembed(params, x, cfg), {"k": kp, "v": vp}
+    x, pools = jax.lax.scan(body, x, (p_run, pools))
+    return _unembed(params, x, cfg), pools
 
 
 # ---------------------------------------------------------------------------
@@ -644,7 +646,8 @@ def prefill_chunk_paged(
 
     chunk: [W, C] ids (stage 0) or [W, C, D] hidden; offsets [W] int32
     (tokens already in context; -1 = masked lane); valids [W] int32;
-    pools: {"k": [n_layers, P+1, page, KV, Dh], "v": ...}.
+    pools: {"k": [n_layers, P+1, page, KV, Dh], "v": ...} — int8 pools
+    additionally carry per-row fp32 scales (see :func:`decode_step_paged`).
     Returns ([W, C, V|D] per-position outputs, updated pools).
     """
     if not supports_paged(cfg):
@@ -672,18 +675,18 @@ def prefill_chunk_paged(
     p_run = params["classes"]["c0"]
 
     def body(x, scanned):
-        p_layer, kp, vp = scanned
+        p_layer, pages = scanned
         h = rmsnorm(x, p_layer["ln1"], cfg.rms_eps)
-        a, (kp, vp) = paged_chunk_attention_block(
+        a, pages = paged_chunk_attention_block(
             h, p_layer["attn"], cfg,
-            positions=positions, k_pages=kp, v_pages=vp,
+            positions=positions, pages=pages,
             block_tables=block_tables,
             write_pages=write_pages, write_offs=write_offs,
         )
         x = x + a
         h2 = rmsnorm(x, p_layer["ln2"], cfg.rms_eps)
         ff, _ = _ffn(h2, p_layer, cfg)
-        return x + ff, (kp, vp)
+        return x + ff, pages
 
-    x, (kp, vp) = jax.lax.scan(body, x, (p_run, pools["k"], pools["v"]))
-    return _unembed(params, x, cfg), {"k": kp, "v": vp}
+    x, pools = jax.lax.scan(body, x, (p_run, pools))
+    return _unembed(params, x, cfg), pools

@@ -5,6 +5,7 @@ from .cache import (
     PagedKVCache,
     PageError,
     PagePool,
+    kv_page_bytes,
 )
 from .engine import (
     PipelineServer,
@@ -27,6 +28,7 @@ __all__ = [
     "PagedKVCache",
     "PageError",
     "PagePool",
+    "kv_page_bytes",
     "StepScheduler",
     "partition_model",
     "slice_stage_params",

@@ -43,7 +43,33 @@ __all__ = [
     "KVCacheManager",
     "DenseSlotCache",
     "PagedKVCache",
+    "kv_page_bytes",
 ]
+
+
+def kv_page_bytes(
+    page_size: int,
+    n_kv_heads: int,
+    head_dim: int,
+    n_layers: int,
+    kv_dtype: str = "float32",
+) -> int:
+    """Bytes one page costs across the K and V pools of every layer.
+
+    The dtype-aware page math behind ``max_pages`` sizing: int8 pages
+    carry one fp32 scale per page row per pool (quantized at scatter),
+    so an int8 page costs ``page_size * (n_kv_heads * head_dim + 4)``
+    bytes per pool per layer instead of fp32's
+    ``page_size * n_kv_heads * head_dim * 4`` — ~4x more pages in the
+    same byte budget at fp32 compute (~2x at bf16). Benchmarks use this
+    to hold KV bytes equal across dtypes
+    (``benchmarks/quant_kv_bench.py``).
+    """
+    itemsize = np.dtype(kv_dtype).itemsize
+    per_pool = page_size * n_kv_heads * head_dim * itemsize
+    if np.dtype(kv_dtype) == np.dtype(np.int8):
+        per_pool += page_size * 4  # fp32 per-row scale
+    return 2 * n_layers * per_pool
 
 
 class PageError(RuntimeError):
@@ -258,10 +284,15 @@ class PagedKVCache(KVCacheManager):
     """
 
     def __init__(
-        self, n_slots: int, max_len: int, page_size: int, n_pages: int
+        self, n_slots: int, max_len: int, page_size: int, n_pages: int,
+        kv_dtype: str | None = None,
     ):
         super().__init__(n_slots)
         self.max_len = max_len
+        # Page dtype is recorded for introspection / page math only —
+        # accounting is in pages, and a page holds page_size entries
+        # regardless of how many bytes each entry costs.
+        self.kv_dtype = kv_dtype
         self.pool = PagePool(n_pages, page_size)
         self.page_size = page_size
         self.nb_max = -(-max_len // page_size)  # block-table row width

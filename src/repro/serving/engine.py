@@ -52,6 +52,17 @@ instead owns a shared pool of fixed-size pages: a request holds
 ``decode_paged`` reads the scattered cache directly, the router weighs
 replicas by free pages, and page exhaustion preempts the youngest
 resident back to the queue (loss-free: prompt + generated re-prefill).
+
+Quantized KV pages (``kv_dtype="int8"``)
+----------------------------------------
+Pages default to the model's compute dtype; ``kv_dtype="int8"`` stores
+int8 entries with one fp32 amax scale per page row, quantized at
+scatter time (decode, chunked and whole prefill write bit-identical
+pages) and dequantized inside the page gather — Pallas kernels and the
+XLA fallback alike. KV bytes per token drop 4x (fp32 compute) / 2x
+(bf16), so the same pool admits proportionally more residents
+(``benchmarks/quant_kv_bench.py``; accuracy swept in
+``tests/test_quant_kv.py``).
 """
 
 from __future__ import annotations
@@ -133,6 +144,7 @@ class ServerStats:
     decode_calls: int = 0  # batched JAX dispatches (decode)
     rerouted_stages: int = 0
     preempted_jobs: int = 0  # paged: evicted on page exhaustion, requeued
+    aged_placements: int = 0  # parked > max_park_steps: force-placed
     peak_active: int = 0  # max concurrently resident requests
     slots: int = 0
     downtime_replica_slots: int = 0  # whole (replica, slot) pairs down
@@ -391,69 +403,98 @@ class _PagedExec:
         ps = server.page_size
 
         @jax.jit
-        def prefill_pages(params, batch, kp, vp, page_ids):
+        def prefill_pages(params, batch, pools, page_ids):
             # batch leaves: [N, 1, S(, D)]; page_ids: [N, NBs] with
             # NBs * ps >= S. The transient dense cache is per-call only.
+            # Compute-dtype pools only — int8 whole prefill goes through
+            # prefill_whole_quant instead (see _run_prefill_whole_quant).
             leaf = jax.tree_util.tree_leaves(batch)[0]
             _count_trace("prefill_pages", g, leaf.shape[0], leaf.shape[2])
             N, NBs = page_ids.shape
             out, cache = model_g.prefill_batch(params, batch, NBs * ps)
             flat = page_ids.reshape(-1)
 
-            def scatter(pool, leaf):
-                # leaf: [N, n_layers, 1, NBs*ps, KV, Dh] -> page blocks
+            def rows(leaf):
+                # leaf: [N, n_layers, 1, NBs*ps, KV, Dh] -> page rows
+                # [n_layers, N*NBs, ps, KV, Dh]
                 n = leaf.shape[1]
                 x = leaf[:, :, 0].reshape(N, n, NBs, ps, *leaf.shape[4:])
-                x = x.transpose(1, 0, 2, 3, 4, 5).reshape(
+                return x.transpose(1, 0, 2, 3, 4, 5).reshape(
                     n, N * NBs, ps, *leaf.shape[4:]
                 )
-                return pool.at[:, flat].set(x.astype(pool.dtype))
 
-            kp = scatter(kp, cache["c0"]["k"])
-            vp = scatter(vp, cache["c0"]["v"])
-            return out, kp, vp
+            new = dict(pools)
+            new["k"] = pools["k"].at[:, flat].set(
+                rows(cache["c0"]["k"]).astype(pools["k"].dtype)
+            )
+            new["v"] = pools["v"].at[:, flat].set(
+                rows(cache["c0"]["v"]).astype(pools["v"].dtype)
+            )
+            return out, new
 
         @jax.jit
         def decode_fn(params, inp, pools, lens, bt):
             _count_trace("decode_paged", g, lens.shape[0])
             return model_g.decode_paged(params, inp, pools, lens, bt)
 
+        @jax.jit
+        def prefill_whole_quant(params, inp, pools, offs, valids, bt):
+            # int8 pools only: whole-prompt prefill runs as ONE
+            # whole-length chunk, so its logits come from the same
+            # quantized pages every later read sees — chunked and
+            # whole-prompt prefill stay token-exact at int8 (the
+            # fp-exact prefill_pages path would emit its first token
+            # from pre-quantization K/V the pool no longer holds).
+            _count_trace("prefill_pages", g, inp.shape[0], inp.shape[1])
+            return model_g.prefill_chunk_paged(
+                params, inp, pools, offs, valids, bt
+            )
+
         self.prefill_pages = prefill_pages
+        self.prefill_whole_quant = prefill_whole_quant
         self.decode_fn = decode_fn
         self.chunk_pages = None
         if server.prefill_chunk is not None:
 
             @jax.jit
-            def chunk_pages(params, inp, kp, vp, offs, valids, bt):
+            def chunk_pages(params, inp, pools, offs, valids, bt):
                 # inp: [W, C(, D)] — one fixed chunk width; each lane's
                 # K/V scatter into its reserved pages incrementally.
                 _count_trace("chunk_paged", g, inp.shape[0], inp.shape[1])
-                out, pools = model_g.prefill_chunk_paged(
-                    params, inp, {"k": kp, "v": vp}, offs, valids, bt
+                return model_g.prefill_chunk_paged(
+                    params, inp, pools, offs, valids, bt
                 )
-                return out, pools["k"], pools["v"]
 
             self.chunk_pages = chunk_pages
 
     def init_cache(self):
         """Shared page pool: [n_layers, P+1, page, KV, Dh] (page index P
-        is the scratch page for masked lanes)."""
+        is the scratch page for masked lanes). ``kv_dtype="int8"`` pools
+        store int8 entries plus one fp32 scale per page row (init 1.0 so
+        untouched rows dequantize to 0)."""
         s = self.server
         c = self.model_g.cfg
         shape = (
             c.n_layers, s.max_pages + 1, s.page_size,
             c.n_kv_heads, c.head_dim,
         )
-        return {
-            "k": jnp.zeros(shape, c.compute_dtype),
-            "v": jnp.zeros(shape, c.compute_dtype),
+        pools = {
+            "k": jnp.zeros(shape, s.kv_dtype),
+            "v": jnp.zeros(shape, s.kv_dtype),
         }
+        if s.kv_dtype == jnp.int8:
+            scales = jnp.ones(shape[:3], jnp.float32)
+            pools["k_scale"] = scales
+            pools["v_scale"] = scales
+        return pools
 
     # -- dispatches ------------------------------------------------------
     def run_prefill_whole(self, r, jobs, outputs, mgr: PagedKVCache):
         s, g = self.server, self.g
         _, params_g = s.stages[g]
         cache = s._caches[(g, r)]
+        if "k_scale" in cache:
+            return self._run_prefill_whole_quant(r, jobs, outputs, mgr)
         key = "tokens" if g == 0 else "hidden"
         for length, grp in sorted(_group_by_len(jobs).items()):
             stacked = jnp.stack([inp for _, _, inp in grp])
@@ -461,13 +502,57 @@ class _PagedExec:
             page_ids = np.asarray(
                 [mgr.pages[m.rid][:nbs] for _, m, _ in grp], np.int32
             )
-            out, kp, vp = self.prefill_pages(
-                params_g, {key: stacked}, cache["k"], cache["v"],
-                jnp.asarray(page_ids),
+            out, cache = self.prefill_pages(
+                params_g, {key: stacked}, cache, jnp.asarray(page_ids)
             )
-            cache = {"k": kp, "v": vp}
             s.stats.prefill_calls += 1
             _emit_whole_outputs(s, g, grp, out, outputs, mgr, length)
+        s._caches[(g, r)] = cache
+
+    def _run_prefill_whole_quant(self, r, jobs, outputs, mgr: PagedKVCache):
+        """int8 pools: one whole-length chunk dispatch per distinct
+        prompt length over the full slot width (masked lanes scatter to
+        the scratch page, resident decoders' pages are untouched)."""
+        s, g = self.server, self.g
+        _, params_g = s.stages[g]
+        cache = s._caches[(g, r)]
+        last = g == s.G - 1
+        W = s.max_batch
+        for length, grp in sorted(_group_by_len(jobs).items()):
+            offs = np.full((W,), -1, np.int32)
+            valids = np.zeros((W,), np.int32)
+            slots = np.asarray([m.slot_ids[g] for _, m, _ in grp], np.int32)
+            offs[slots] = 0
+            valids[slots] = length
+            if g == 0:
+                buf = np.zeros((W, length), np.int32)
+                for _, m, inp in grp:
+                    buf[m.slot_ids[g]] = np.asarray(inp[0])
+                inp_w = jnp.asarray(buf)
+            else:
+                hs = jnp.stack([inp[0] for _, _, inp in grp])  # [N, S, D]
+                inp_w = (
+                    jnp.zeros((W, length, s.cfg.d_model), hs.dtype)
+                    .at[jnp.asarray(slots)]
+                    .set(hs)
+                )
+            out, cache = self.prefill_whole_quant(
+                params_g, inp_w, cache,
+                jnp.asarray(offs), jnp.asarray(valids),
+                mgr.device_block_table(),
+            )
+            s.stats.prefill_calls += 1
+            for _, m, _ in grp:
+                mgr.lengths[m.slot_ids[g]] = length
+            if last:
+                toks = np.asarray(
+                    jnp.argmax(out[jnp.asarray(slots), length - 1], axis=-1)
+                )
+                for j, (i, _, _) in enumerate(grp):
+                    outputs[i] = ("token", int(toks[j]), 0)
+            else:
+                for i, m, _ in grp:
+                    outputs[i] = ("hidden", out[m.slot_ids[g], :length][None], 0)
         s._caches[(g, r)] = cache
 
     def run_chunks(self, r, jobs, outputs, mgr: PagedKVCache):
@@ -501,11 +586,11 @@ class _PagedExec:
                 .at[jnp.asarray(slots)]
                 .set(hs)
             )
-        out, kp, vp = self.chunk_pages(
-            params_g, inp, cache["k"], cache["v"],
+        out, cache = self.chunk_pages(
+            params_g, inp, cache,
             jnp.asarray(offs), jnp.asarray(valids), mgr.device_block_table(),
         )
-        s._caches[(g, r)] = {"k": kp, "v": vp}
+        s._caches[(g, r)] = cache
         s.stats.chunk_prefill_calls += 1
         toks = np.asarray(jnp.argmax(out, axis=-1)) if last else None
         _emit_chunk_outputs(
@@ -548,7 +633,7 @@ class _PagedExec:
                 .set(hs)
             )
         out, cache = self.decode_fn(
-            params_g, inp, {"k": cache["k"], "v": cache["v"]},
+            params_g, inp, cache,
             jnp.asarray(lens_arr), mgr.device_block_table(),
         )
         s._caches[(g, r)] = cache
@@ -587,7 +672,9 @@ class PipelineServer:
         paged: bool = False,
         page_size: int = 16,
         max_pages: int | None = None,
+        kv_dtype: str | None = None,
         prefill_chunk: int | None = None,
+        max_park_steps: int | None = 32,
         seed: int = 0,
     ):
         self.cfg = model.cfg
@@ -598,6 +685,20 @@ class PipelineServer:
         self.paged = paged
         self.page_size = page_size
         self.prefill_chunk = prefill_chunk
+        # KV page dtype: None keeps pages at the model's compute dtype;
+        # "int8" quantizes at scatter (per-row fp32 scales ride along),
+        # so the same pool bytes hold ~4x (fp32) / ~2x (bf16) the pages.
+        if kv_dtype is not None and not paged:
+            raise ValueError("kv_dtype applies to the paged KV cache only")
+        self.kv_dtype = (
+            jnp.dtype(model.cfg.compute_dtype)
+            if kv_dtype is None
+            else jnp.dtype(kv_dtype)
+        )
+        if self.kv_dtype not in (jnp.dtype(model.cfg.compute_dtype), jnp.int8):
+            raise ValueError(
+                f"kv_dtype must be the compute dtype or int8, got {kv_dtype}"
+            )
         # Default pool = dense capacity (max_batch full-length contexts);
         # the paged win comes from setting max_pages *below* this while
         # raising max_batch — short requests then pack the same memory.
@@ -639,7 +740,10 @@ class PipelineServer:
         # single _start_call below talk only to this interface.
         if paged:
             self.managers: dict[tuple[int, int], KVCacheManager] = {
-                (g, r): PagedKVCache(max_batch, max_len, page_size, self.max_pages)
+                (g, r): PagedKVCache(
+                    max_batch, max_len, page_size, self.max_pages,
+                    kv_dtype=str(self.kv_dtype),
+                )
                 for g in range(n_groups)
                 for r in range(n_replicas)
             }
@@ -655,6 +759,7 @@ class PipelineServer:
             router=self.router,
             stats=self.stats,
             max_queue=max_queue,
+            max_park_steps=max_park_steps,
         )
         self._exec = [
             (_PagedExec if paged else _DenseExec)(self, g) for g in range(n_groups)

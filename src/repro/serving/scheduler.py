@@ -20,6 +20,13 @@ Responsibilities:
   re-routed to a sibling (slot-only reservation, memory grows lazily at
   call time) or parked slotless and retried every slot. Parked requests
   re-place BEFORE queue admission so fresh traffic cannot starve them.
+* **Starvation-free aging**: re-placement alone cannot help when live
+  siblings stay saturated — sustained traffic refills every freed slot
+  and a parked victim waits forever. Each parked slot-step increments
+  ``Request.park_steps``; past ``max_park_steps`` the scheduler stops
+  waiting and *force-places*: it preempts the youngest resident of the
+  best live sibling (requeued loss-free, like page-exhaustion
+  preemption) and hands the freed slot to the victim.
 * **Preemption**: when a paged replica runs out of pages mid-step, the
   youngest resident not in a call is evicted fleet-wide and requeued;
   its prompt + generated tokens re-prefill on re-admission, so
@@ -61,6 +68,7 @@ class Request:
     generated: list[int] = dataclasses.field(default_factory=list)
     hidden: Any = None  # inter-stage activation
     in_call: bool = False  # member of the current stage call
+    park_steps: int = 0  # consecutive slots parked slotless (aging)
     queued: bool = False  # waiting for admission (backpressure)
     done: bool = False
     dropped: bool = False
@@ -95,12 +103,14 @@ class StepScheduler:
         router: Router,
         stats,
         max_queue: int | None = None,
+        max_park_steps: int | None = 32,
     ):
         self.budgets = budgets
         self.managers = managers
         self.router = router
         self.stats = stats
         self.max_queue = max_queue
+        self.max_park_steps = max_park_steps
         self.G = len(budgets)
         self.R = len(budgets[0]) if budgets else 0
         self.active: list[Request] = []
@@ -188,6 +198,7 @@ class StepScheduler:
         req.cache_ready = [False] * self.G
         req.chunk_pos = 0
         req.chunk_outs = []
+        req.park_steps = 0
         req.queued = False
         self.active.append(req)
         self.stats.peak_active = max(self.stats.peak_active, len(self.active))
@@ -215,13 +226,30 @@ class StepScheduler:
         replica may have recovered or a sibling freed up). Runs BEFORE
         queue admission: in-flight work already holds slots and pages on
         its other groups, so freed capacity goes to it first — fresh
-        admissions must not starve a parked request."""
+        admissions must not starve a parked request.
+
+        Re-placement alone is not starvation-free: while siblings stay
+        saturated the victim parks forever. Every slot a request stays
+        parked ages it one ``park_steps``; past ``max_park_steps`` the
+        scheduler force-places it (:meth:`force_place`)."""
         for req in list(self.active):
-            if req.in_call:
-                continue
+            if req.in_call or req.replicas is None:
+                continue  # replicas None: preempted by an earlier
+                # member's force_place within this very sweep (requeued)
             g = req.stage
-            if not self.budgets[g][req.replicas[g]].alive or req.slot_ids[g] is None:
-                self.reroute_or_drop(req)
+            if self.budgets[g][req.replicas[g]].alive and req.slot_ids[g] is not None:
+                continue
+            self.reroute_or_drop(req)
+            if req.dropped or req.queued or req.slot_ids[g] is not None:
+                req.park_steps = 0  # placed (or no longer waiting)
+                continue
+            req.park_steps += 1
+            if (
+                self.max_park_steps is not None
+                and req.park_steps > self.max_park_steps
+                and self.force_place(req)
+            ):
+                req.park_steps = 0
 
     def reroute_or_drop(self, req: Request) -> None:
         """Failure handling: shift the in-flight stage to a sibling.
@@ -255,6 +283,36 @@ class StepScheduler:
         # call time (ensure_capacity), chunk by chunk in chunked mode.
         req.slot_ids[g] = self.managers[(g, new_r)].reserve(req.rid, 0)
         self.stats.rerouted_stages += 1
+
+    def force_place(self, req: Request) -> bool:
+        """Starvation-free aging: give a long-parked request a slot NOW.
+
+        A request parked longer than ``max_park_steps`` stops waiting
+        for capacity to free naturally: the youngest resident of the
+        live sibling with the most headroom is preempted (requeued
+        loss-free, exactly like page-exhaustion preemption) and the
+        parked request takes the freed slot (slot-only reservation —
+        memory grows lazily at call time). False = no live sibling had
+        a preemptable resident this slot; aging retries next slot."""
+        g = req.stage
+        live = [r for r in range(self.R) if self.budgets[g][r].alive]
+        live.sort(
+            key=lambda r: self.managers[(g, r)].capacity_weight(), reverse=True
+        )
+        for r in live:
+            mgr = self.managers[(g, r)]
+            while mgr.free_slots() == 0:
+                victim = self.youngest_preemptable(g, r, {req.rid})
+                if victim is None:
+                    break
+                self.preempt(victim)
+            if mgr.free_slots() > 0:
+                req.replicas[g] = r
+                req.slot_ids[g] = mgr.reserve(req.rid, 0)
+                self.stats.rerouted_stages += 1
+                self.stats.aged_placements += 1
+                return True
+        return False
 
     def drop_resident(self, req: Request) -> None:
         """Release every group's claim and drop the request."""
@@ -313,6 +371,7 @@ class StepScheduler:
         victim.chunk_pos = 0
         victim.chunk_outs = []
         victim.chunk_seq = None
+        victim.park_steps = 0
         victim.queued = True
         self.pending.append(victim)
         self.stats.preempted_jobs += 1

@@ -1,0 +1,47 @@
+"""Benchmark-record schema check (tier-1): every ``BENCH_*.json`` at
+the repo root shares the common envelope ``{name, commit, metrics{}}``
+written by :func:`benchmarks.common.write_bench`, so
+``benchmarks/run.py --summary`` can aggregate the perf trajectory."""
+
+import json
+import pathlib
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+SCHEMA_KEYS = {"name", "commit", "metrics"}
+
+
+def _records():
+    paths = sorted(REPO_ROOT.glob("BENCH_*.json"))
+    assert paths, "no BENCH_*.json records at the repo root"
+    return [(p, json.loads(p.read_text())) for p in paths]
+
+
+def test_every_bench_record_has_the_envelope():
+    for path, data in _records():
+        assert set(data) == SCHEMA_KEYS, (
+            f"{path.name}: expected exactly {sorted(SCHEMA_KEYS)}, "
+            f"got {sorted(data)}"
+        )
+        assert isinstance(data["name"], str) and data["name"]
+        assert isinstance(data["commit"], str) and data["commit"]
+        assert isinstance(data["metrics"], dict) and data["metrics"]
+
+
+def test_bench_names_are_unique():
+    names = [data["name"] for _, data in _records()]
+    assert len(names) == len(set(names)), names
+
+
+def test_summary_aggregates_every_record(capsys):
+    """--summary prints one block per record with headline metrics."""
+    import sys
+
+    sys.path.insert(0, str(REPO_ROOT))
+    try:
+        from benchmarks.run import summary
+    finally:
+        sys.path.pop(0)
+    summary()
+    out = capsys.readouterr().out
+    for _, data in _records():
+        assert f"{data['name']} @ {data['commit']}" in out

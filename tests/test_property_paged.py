@@ -1,8 +1,9 @@
 """Property-based paged-attention validation (hypothesis): random batch
 sizes, context lengths, page sizes, GQA head counts, and sliding
-windows; the Pallas block-table-gather kernel (interpret mode) and the
-gather oracle must match the *dense* decode reference on the
-equivalent contiguous cache, under arbitrary page scatter."""
+windows; the Pallas block-table-gather kernels (interpret mode) and the
+gather oracles must match the *dense* references on the equivalent
+contiguous cache, under arbitrary page scatter — decode (single query)
+and prefill (multi-query chunk with ragged per-lane offsets) alike."""
 
 import numpy as np
 import pytest
@@ -17,7 +18,11 @@ from repro.kernels.decode_attention import (
     decode_attention_ref,
     paged_decode_attention,
     paged_decode_attention_ref,
+    paged_prefill_attention,
+    paged_prefill_attention_pallas,
+    quantize_kv,
 )
+from repro.models.attention import chunked_attention
 
 SETTINGS = dict(max_examples=12, deadline=None)
 
@@ -78,6 +83,75 @@ def test_paged_decode_attention_property(shape, seed):
     # Paging is invisible: scattered == contiguous.
     np.testing.assert_allclose(np.asarray(out), np.asarray(dense), rtol=3e-5, atol=3e-5)
     assert np.all(np.isfinite(np.asarray(out)))
+
+
+@st.composite
+def prefill_shapes(draw):
+    B = draw(st.integers(1, 3))
+    page = draw(st.sampled_from([4, 8, 16]))
+    NB = draw(st.integers(1, 4))
+    KV = draw(st.sampled_from([1, 2]))
+    G = draw(st.sampled_from([1, 2, 4]))  # GQA ratio
+    D = draw(st.sampled_from([8, 32]))
+    C = draw(st.integers(1, min(6, NB * page)))  # chunk width
+    S = NB * page
+    # Ragged lanes: each lane continues its prefill from its own offset.
+    offsets = tuple(draw(st.integers(0, S - C)) for _ in range(B))
+    spare = draw(st.integers(0, 3))
+    quantized = draw(st.booleans())
+    return B, page, NB, KV, G, D, C, offsets, spare, quantized
+
+
+@given(prefill_shapes(), st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_paged_prefill_attention_property(shape, seed):
+    """Pallas prefill kernel (interpret) == gather oracle == dense
+    chunked_attention, under random page sizes, chunk widths, GQA
+    ratios, ragged per-lane offsets, and int8 quantization."""
+    B, page, NB, KV, G, D, C, offsets, spare, quantized = shape
+    H = KV * G
+    S = NB * page
+    P = B * NB + spare
+    rng = np.random.default_rng(seed)
+
+    k_dense = rng.normal(size=(B, S, KV, D)).astype(np.float32)
+    v_dense = rng.normal(size=(B, S, KV, D)).astype(np.float32)
+    block_tables = rng.permutation(P)[: B * NB].reshape(B, NB).astype(np.int32)
+    k_pages = rng.normal(size=(P, page, KV, D)).astype(np.float32)  # garbage
+    v_pages = rng.normal(size=(P, page, KV, D)).astype(np.float32)
+    for b in range(B):
+        for j in range(NB):
+            k_pages[block_tables[b, j]] = k_dense[b, j * page : (j + 1) * page]
+            v_pages[block_tables[b, j]] = v_dense[b, j * page : (j + 1) * page]
+
+    q = rng.normal(size=(B, C, H, D)).astype(np.float32)
+    offs = np.asarray(offsets, np.int32)
+    kp, vp = jnp.asarray(k_pages), jnp.asarray(v_pages)
+    scales = {}
+    if quantized:
+        kp, ks = quantize_kv(kp)
+        vp, vs = quantize_kv(vp)
+        scales = dict(k_scales=ks, v_scales=vs)
+
+    out = paged_prefill_attention_pallas(
+        jnp.asarray(q), kp, vp, jnp.asarray(block_tables), jnp.asarray(offs),
+        interpret=True, **scales,
+    )
+    ref = paged_prefill_attention(
+        jnp.asarray(q), kp, vp, jnp.asarray(block_tables), jnp.asarray(offs),
+        **scales,
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=3e-5, atol=3e-5)
+    assert np.all(np.isfinite(np.asarray(out)))
+    if not quantized:
+        # Paging is invisible: scattered pages == the contiguous cache.
+        dense = chunked_attention(
+            jnp.asarray(q), jnp.asarray(k_dense), jnp.asarray(v_dense),
+            causal=True, q_offset=jnp.asarray(offs), chunk=16,
+        )
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(dense), rtol=3e-5, atol=3e-5
+        )
 
 
 @given(

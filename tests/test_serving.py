@@ -402,6 +402,46 @@ class TestContinuousBatching:
             server.step()
         assert a.done  # the parked request reclaimed capacity first
 
+    def test_aging_force_places_starved_parked_victim(self):
+        """Satellite: re-placement alone is not starvation-free — when
+        the only live sibling stays saturated (here: one slot held by a
+        long decode that outlives the test horizon), a failover victim
+        used to park indefinitely. With ``max_park_steps`` the scheduler
+        force-places it by preempting the sibling's youngest resident
+        (requeued loss-free), and decoding stays token-exact."""
+        cfg, model, params = tiny_model()
+
+        def park_scenario(max_park_steps):
+            server = PipelineServer(
+                model, params, n_groups=1, n_replicas=2,
+                harvest_bounds=(50.0, 60.0), max_len=128, max_batch=1,
+                max_park_steps=max_park_steps, seed=8,
+            )
+            a = server.submit(np.arange(4), n_tokens=3)
+            # b's decode outlives the horizon: its slot never frees.
+            b = server.submit(np.arange(4) + 1, n_tokens=120)
+            assert a.replicas[0] != b.replicas[0]
+            server.step()
+            server.fail_replica(0, a.replicas[0])
+            for _ in range(100):
+                if a.done:
+                    break
+                server.step()
+            return server, a
+
+        # Without aging the victim starves for the whole horizon.
+        server, a = park_scenario(None)
+        assert not a.done and a.park_steps > 50
+        assert server.stats.aged_placements == 0
+
+        # With aging it lands within max_park_steps + a few slots.
+        server, a = park_scenario(6)
+        assert a.done
+        assert server.stats.aged_placements >= 1
+        assert server.stats.preempted_jobs >= 1
+        assert server.stats.dropped_jobs == 0
+        assert a.generated == direct_greedy(model, params, np.arange(4), 3)
+
     def test_new_submit_never_jumps_the_queue(self):
         """Regression: capacity freed between steps used to go to the
         newest submit() instead of the FIFO head, starving queued
