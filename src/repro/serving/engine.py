@@ -511,48 +511,42 @@ class _PagedExec:
 
     def _run_prefill_whole_quant(self, r, jobs, outputs, mgr: PagedKVCache):
         """int8 pools: one whole-length chunk dispatch per distinct
-        prompt length over the full slot width (masked lanes scatter to
-        the scratch page, resident decoders' pages are untouched)."""
+        prompt length, over ONLY the joining lanes with a compact
+        [N, nbs] block table (same work profile as the fp32
+        prefill_pages path — dispatching the full slot width against
+        the full-width table measured as a whole-percent tokens/s
+        hit). The extra masked positions a full-width table would
+        gather contribute exp(-inf) = 0, so the compact call is
+        bit-identical to what the chunked path later reads."""
         s, g = self.server, self.g
         _, params_g = s.stages[g]
         cache = s._caches[(g, r)]
         last = g == s.G - 1
-        W = s.max_batch
         for length, grp in sorted(_group_by_len(jobs).items()):
-            offs = np.full((W,), -1, np.int32)
-            valids = np.zeros((W,), np.int32)
-            slots = np.asarray([m.slot_ids[g] for _, m, _ in grp], np.int32)
-            offs[slots] = 0
-            valids[slots] = length
+            N = len(grp)
+            nbs = mgr.pool.blocks_for(length)
+            page_ids = np.asarray(
+                [mgr.pages[m.rid][:nbs] for _, m, _ in grp], np.int32
+            )
+            offs = jnp.zeros((N,), jnp.int32)
+            valids = jnp.full((N,), length, jnp.int32)
             if g == 0:
-                buf = np.zeros((W, length), np.int32)
-                for _, m, inp in grp:
-                    buf[m.slot_ids[g]] = np.asarray(inp[0])
-                inp_w = jnp.asarray(buf)
+                inp_w = jnp.stack([jnp.asarray(inp[0]) for _, _, inp in grp])
             else:
-                hs = jnp.stack([inp[0] for _, _, inp in grp])  # [N, S, D]
-                inp_w = (
-                    jnp.zeros((W, length, s.cfg.d_model), hs.dtype)
-                    .at[jnp.asarray(slots)]
-                    .set(hs)
-                )
+                inp_w = jnp.stack([inp[0] for _, _, inp in grp])  # [N, S, D]
             out, cache = self.prefill_whole_quant(
-                params_g, inp_w, cache,
-                jnp.asarray(offs), jnp.asarray(valids),
-                mgr.device_block_table(),
+                params_g, inp_w, cache, offs, valids, jnp.asarray(page_ids)
             )
             s.stats.prefill_calls += 1
             for _, m, _ in grp:
                 mgr.lengths[m.slot_ids[g]] = length
             if last:
-                toks = np.asarray(
-                    jnp.argmax(out[jnp.asarray(slots), length - 1], axis=-1)
-                )
+                toks = np.asarray(jnp.argmax(out[:, length - 1], axis=-1))
                 for j, (i, _, _) in enumerate(grp):
                     outputs[i] = ("token", int(toks[j]), 0)
             else:
-                for i, m, _ in grp:
-                    outputs[i] = ("hidden", out[m.slot_ids[g], :length][None], 0)
+                for j, (i, _, _) in enumerate(grp):
+                    outputs[i] = ("hidden", out[j, :length][None], 0)
         s._caches[(g, r)] = cache
 
     def run_chunks(self, r, jobs, outputs, mgr: PagedKVCache):
