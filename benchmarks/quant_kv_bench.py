@@ -127,9 +127,17 @@ def throughput_at_batch(
         wave(s)  # warmup: compiles every dispatch shape
     tokens = n_requests * n_tokens
     best = {mode: float("inf") for mode in servers}
-    for _ in range(repeat):  # interleave the A/B waves
-        for mode, s in servers.items():
-            best[mode] = min(best[mode], wave(s))
+    ratios = []
+    for r in range(repeat):  # interleave the A/B waves
+        # Alternate the order each round: each wave is sub-second, so a
+        # background blip hitting "whichever mode runs second" would
+        # otherwise bias the comparison one way.
+        order = list(servers) if r % 2 == 0 else list(servers)[::-1]
+        t = {}
+        for mode in order:
+            t[mode] = wave(servers[mode])
+            best[mode] = min(best[mode], t[mode])
+        ratios.append(t["fp32"] / t["int8"])
     out = {
         mode: {
             "tokens_per_s": round(tokens / best[mode], 1),
@@ -138,9 +146,9 @@ def throughput_at_batch(
         }
         for mode in servers
     }
-    out["int8_vs_fp32"] = round(
-        out["int8"]["tokens_per_s"] / max(out["fp32"]["tokens_per_s"], 1e-9), 3
-    )
+    # Median of per-round paired ratios: drift hits both modes of a
+    # round together, so the pairing cancels it where best-of cannot.
+    out["int8_vs_fp32"] = round(float(np.median(ratios)), 3)
     return out
 
 
@@ -212,6 +220,17 @@ def greedy_agreement(n_steps: int = 64, prompt_len: int = 12) -> dict:
 
 def run(smoke: bool = False) -> list[str]:
     rows = []
+    # Throughput FIRST, in a fresh process state: the capacity phase's
+    # W=64 churn (big pools allocated and dropped) measurably flattens
+    # a later A/B comparison on this box. 64 decode tokens per request:
+    # steady-state decode is where int8's 4x-smaller gather pays;
+    # sub-second waves of short decodes are scheduler-noise-dominated.
+    tp = throughput_at_batch(
+        16,
+        n_requests=8 if smoke else 16,
+        n_tokens=8 if smoke else 64,
+        prompt_len=6,
+    )
     # Slots must not bind before pages do (max_batch > the fp32 pool's
     # 31 pages), or both modes plateau at max_batch and the gain hides.
     cap = capacity_at_equal_kv_bytes(
@@ -230,15 +249,6 @@ def run(smoke: bool = False) -> list[str]:
             f"{cap['int8']['kv_bytes_per_replica']}B vs "
             f"{cap['fp32']['kv_bytes_per_replica']}B per replica",
         )
-    )
-    # 64 decode tokens per request: steady-state decode is where int8's
-    # 4x-smaller gather pays; sub-second waves of short decodes are
-    # scheduler-noise-dominated on this box and hide the signal.
-    tp = throughput_at_batch(
-        16,
-        n_requests=8 if smoke else 16,
-        n_tokens=8 if smoke else 64,
-        prompt_len=6,
     )
     rows.append(
         csv_row(
