@@ -32,13 +32,24 @@ BENCH_SCHEMA_KEYS = ("name", "commit", "metrics")
 
 
 def _git_commit() -> str:
-    # --dirty: a record produced from an uncommitted tree must not be
-    # attributed to the clean commit it happens to sit on.
+    # A record produced from an uncommitted tree must not be attributed
+    # to the clean commit it happens to sit on — except for the
+    # BENCH_*.json records themselves, whose rewrite is the very point
+    # of the run (they land in the next commit).
     try:
-        return subprocess.check_output(
-            ["git", "describe", "--always", "--dirty"],
+        head = subprocess.check_output(
+            ["git", "rev-parse", "--short", "HEAD"],
             cwd=REPO_ROOT, text=True, stderr=subprocess.DEVNULL,
         ).strip()
+        status = subprocess.check_output(
+            ["git", "status", "--porcelain"],
+            cwd=REPO_ROOT, text=True, stderr=subprocess.DEVNULL,
+        )
+        dirty = any(
+            line and not line[3:].startswith("BENCH_")
+            for line in status.splitlines()
+        )
+        return head + ("-dirty" if dirty else "")
     except Exception:
         return "unknown"
 
