@@ -92,6 +92,17 @@ def mixed_traffic(
         if steps > 200 * n_requests * n_tokens:  # pragma: no cover
             raise RuntimeError("mixed workload did not drain")
     wall = time.perf_counter() - t0
+    if prefill_chunk is not None:
+        # Compile-count budget: chunked runs must hold one compiled
+        # shape per (kind, stage) — a length-keyed re-jit fails here.
+        from repro.analysis import check_trace_budgets, load_budgets
+
+        findings = check_trace_budgets(
+            trace_counts(), load_budgets(),
+            context=f"chunked_bench:{'paged' if paged else 'dense'}",
+        )
+        if findings:
+            raise SystemExit("\n".join(f"FAIL {f}" for f in findings))
     ttfts = [r.ttft for r in reqs if r.ttft is not None]
     shapes, traces = _prefill_traces()
     tokens = server.stats.tokens_generated

@@ -17,9 +17,10 @@ import time
 
 import numpy as np
 
+from repro.analysis import check_trace_budgets, load_budgets
 from repro.core.network import paper_topology
 from repro.core.simulator import SimConfig, simulate_sweep
-from repro.serving import PipelineServer
+from repro.serving import PipelineServer, reset_trace_counts, trace_counts
 
 from .common import csv_row, smoke_serving_model as _model, timed, write_bench
 
@@ -79,8 +80,10 @@ def batch_sweep(
     masked decode dispatch serves every resident request, so tokens/s
     scales with occupancy while the per-slot dispatch count stays flat."""
     cfg, model, params = _model()
+    trace_budgets = load_budgets()
     rows, report = [], {}
     for mb in batch_sizes:
+        reset_trace_counts()  # each max_batch is its own compile universe
         server = PipelineServer(
             model,
             params,
@@ -109,6 +112,11 @@ def batch_sweep(
             if steps > 100 * n_requests * n_tokens:  # pragma: no cover
                 raise RuntimeError("batch sweep did not drain")
         dt = time.perf_counter() - t0
+        findings = check_trace_budgets(
+            trace_counts(), trace_budgets, context=f"serve_bench:batch{mb}"
+        )
+        if findings:  # compile-count budget: one decode shape per stage
+            raise SystemExit("\n".join(f"FAIL {f}" for f in findings))
         tokens = server.stats.tokens_generated - warm_tokens
         tps = tokens / dt
         report[str(mb)] = {

@@ -3,7 +3,6 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import dataclasses
-from collections import deque
 
 import jax
 import jax.numpy as jnp
@@ -51,59 +50,8 @@ with use_mesh_rules(mesh, DECODE_RULES):
     )
 open("/tmp/qwen_decode.hlo", "w").write(hlo)
 
-comps = A._parse_computations(hlo)
-entry = comps["__entry__"].name
-names = [n for n in comps if n != "__entry__"]
-comp_edges = {n: [] for n in names}
-in_deg = {n: 0 for n in names}
-for name in names:
-    for op in comps[name].ops:
-        callees = A._callees(op)
-        trip = None
-        if op.kind == "while":
-            cond = next((c for c, k in callees.items() if k == "condition"), None)
-            trip = A._trip_count(comps, op, cond)
-        for callee, kind in callees.items():
-            if callee not in in_deg:
-                continue
-            factor = (
-                float((trip or 1) + 1)
-                if kind == "condition"
-                else float(trip or 1)
-                if kind == "body"
-                else 1.0
-            )
-            comp_edges[name].append((callee, factor, kind in ("condition", "fusion")))
-            in_deg[callee] += 1
-mult = {n: 0.0 for n in names}
-fused = {n: None for n in names}
-mult[entry] = 1.0
-fused[entry] = False
-q = deque([n for n in names if in_deg[n] == 0])
-while q:
-    n = q.popleft()
-    for callee, factor, fe in comp_edges[n]:
-        mult[callee] += mult[n] * factor
-        cf = bool(fused[n]) or fe
-        fused[callee] = cf if fused[callee] is None else (fused[callee] and cf)
-        in_deg[callee] -= 1
-        if in_deg[callee] == 0:
-            q.append(callee)
-contrib = []
-for n in names:
-    if fused.get(n):
-        continue
-    m = mult.get(n, 0)
-    if m == 0:
-        continue
-    for op in comps[n].ops:
-        if op.kind in A._BYTE_FREE:
-            continue
-        b = A._op_bytes(comps[n], op) * m
-        if b > 2e9:
-            contrib.append((b, n, op.kind, op.line[:100]))
-contrib.sort(key=lambda t: -t[0])
 total = A.analyze_hlo(hlo)
 print(f"total bytes/device {total.bytes/1e9:.1f} GB")
-for b, n, k, l in contrib[:10]:
-    print(f"{b/1e9:8.1f} GB  {k:14s} in {n[:28]:28s} {l[:86]}")
+for b, k, line in A.top_contributors(hlo, "bytes", limit=10):
+    if b > 2e9:
+        print(f"{b/1e9:8.1f} GB  {k:14s} {line[:100]}")

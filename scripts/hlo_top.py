@@ -1,13 +1,16 @@
 """Top byte/FLOP contributors of a dry-run HLO artifact.
 
     PYTHONPATH=src python scripts/hlo_top.py artifacts/dryrun/<cell>.hlo.gz [bytes|flops|coll]
+
+Thin shell over :func:`repro.roofline.top_contributors`, which shares
+the call-multiplier propagation with ``analyze_hlo`` so the drill-down
+always agrees with the roofline totals on loop trip scaling.
 """
 
 import gzip
 import sys
-from collections import deque
 
-from repro.roofline import analysis as A
+from repro.roofline import top_contributors
 
 
 def main() -> None:
@@ -17,76 +20,13 @@ def main() -> None:
     with opener(path, "rt") as f:
         hlo = f.read()
 
-    comps = A._parse_computations(hlo)
-    entry = comps["__entry__"].name
-    names = [n for n in comps if n != "__entry__"]
-    comp_edges = {n: [] for n in names}
-    in_deg = {n: 0 for n in names}
-    for name in names:
-        for op in comps[name].ops:
-            callees = A._callees(op)
-            trip = None
-            if op.kind == "while":
-                cond = next((c for c, k in callees.items() if k == "condition"), None)
-                trip = A._trip_count(comps, op, cond)
-            for callee, kind in callees.items():
-                if callee not in in_deg:
-                    continue
-                factor = (
-                    float((trip or 1) + 1)
-                    if kind == "condition"
-                    else float(trip or 1)
-                    if kind == "body"
-                    else 1.0
-                )
-                comp_edges[name].append((callee, factor, kind in ("condition", "fusion")))
-                in_deg[callee] += 1
-    mult = {n: 0.0 for n in names}
-    fused = {n: None for n in names}
-    mult[entry] = 1.0
-    fused[entry] = False
-    q = deque([n for n in names if in_deg[n] == 0])
-    while q:
-        n = q.popleft()
-        for callee, factor, fe in comp_edges[n]:
-            mult[callee] += mult[n] * factor
-            cf = bool(fused[n]) or fe
-            fused[callee] = cf if fused[callee] is None else (fused[callee] and cf)
-            in_deg[callee] -= 1
-            if in_deg[callee] == 0:
-                q.append(callee)
-
-    contrib = []
-    for n in names:
-        m = mult.get(n, 0)
-        if m == 0:
-            continue
-        for op in comps[n].ops:
-            if mode == "flops":
-                if op.kind == "dot":
-                    v = m * A._dot_flops(comps[n], op)
-                elif op.kind == "convolution":
-                    v = m * A._conv_flops(comps[n], op)
-                else:
-                    continue
-            elif mode == "coll":
-                base = op.kind[:-6] if op.kind.endswith("-start") else op.kind
-                if base not in A._COLLECTIVES or op.kind.endswith("-done"):
-                    continue
-                v = m * A._all_shape_bytes(op.result_type)
-            else:
-                if fused.get(n) or op.kind in A._BYTE_FREE:
-                    continue
-                v = m * A._op_bytes(comps[n], op)
-            if v > 0:
-                contrib.append((v, op.kind, op.line[:130]))
-    contrib.sort(key=lambda t: -t[0])
+    contrib = top_contributors(hlo, mode)
     unit = 1e9 if mode != "flops" else 1e12
     suffix = "GB" if mode != "flops" else "TF"
     total = sum(c[0] for c in contrib)
     print(f"total: {total/unit:.1f} {suffix}")
-    for v, k, l in contrib[:15]:
-        print(f"{v/unit:9.2f} {suffix} {k:12s} {l}")
+    for v, k, line in contrib[:15]:
+        print(f"{v/unit:9.2f} {suffix} {k:12s} {line[:130]}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,62 @@
+"""Static-analysis pass framework over jaxprs (+ runtime sanitizers).
+
+On battery-powered edge devices every wasted recompile, silent fp32
+upcast, and hidden device->host sync burns energy the paper's
+semi-Markov model assumes is going to useful inference. This package
+is the guard rail: a recursive jaxpr walker (:mod:`.walker`), a rule
+registry (:mod:`.rules`) with a budgets file (:mod:`.budgets`,
+``budgets.json``), lint entry points over the serving surface
+(:mod:`.entry_points`), a compile-count gate (:mod:`.recompile`), a
+runtime device->host transfer sanitizer (:mod:`.sanitizer`), and a CLI
+(``python -m repro.analysis.cli --check``) emitting a machine-readable
+JSON report.
+
+Rules shipped out of the box:
+
+* ``primitive-budget`` — per-entry-point primitive count ceilings
+  (e.g. zero pool gathers in the Pallas paged decode/prefill paths);
+* ``host-sync`` — statically forbid ``io_callback`` /
+  ``debug_callback``-style host round-trips inside jitted serving
+  entry points;
+* ``dtype-promotion`` — bound silent upcasts from bf16/fp16/int8 to
+  fp32 (LSE accumulators and per-row KV scales are budgeted, anything
+  beyond fails);
+* ``recompile-budget`` — per-(kind, stage) compiled-shape budgets over
+  :func:`repro.serving.trace_counts`, enforced after engine smoke runs.
+"""
+
+from .budgets import default_budgets, load_budgets, resolve_budget
+from .entry_points import EntryPoint, build_entry_points
+from .recompile import check_trace_budgets, run_host_sync_gate, run_recompile_gate
+from .rules import RULES, Finding, Rule, register_rule, run_static_rules
+from .sanitizer import (
+    HostSyncError,
+    TransferSanitizer,
+    active_sanitizer,
+    host_readback,
+)
+from .walker import count_primitive, iter_eqns, primitive_counts, subjaxprs
+
+__all__ = [
+    "EntryPoint",
+    "Finding",
+    "HostSyncError",
+    "RULES",
+    "Rule",
+    "TransferSanitizer",
+    "active_sanitizer",
+    "build_entry_points",
+    "check_trace_budgets",
+    "count_primitive",
+    "default_budgets",
+    "host_readback",
+    "iter_eqns",
+    "load_budgets",
+    "primitive_counts",
+    "register_rule",
+    "resolve_budget",
+    "run_host_sync_gate",
+    "run_recompile_gate",
+    "run_static_rules",
+    "subjaxprs",
+]

@@ -1,0 +1,46 @@
+"""Budget file: load, merge, and per-entry-point resolution.
+
+Budgets live in ``budgets.json`` next to this module (the repo's
+checked-in source of truth; ``--budgets PATH`` on the CLI overrides).
+Sections keyed by *glob patterns* over entry-point names are resolved
+with :func:`resolve_budget`: every matching pattern applies in file
+order, later (more specific) patterns overriding earlier ones — so
+``"*:decode_step_paged:pallas"`` sets the fleet-wide ceiling and
+``"qwen3-moe-30b-a3b:*:pallas"`` below it can carve out the MoE
+exception. (Names are colon-separated on purpose: fnmatch treats
+square brackets as character classes.)
+"""
+
+from __future__ import annotations
+
+import fnmatch
+import json
+import pathlib
+
+__all__ = ["DEFAULT_BUDGETS_PATH", "default_budgets", "load_budgets", "resolve_budget"]
+
+DEFAULT_BUDGETS_PATH = pathlib.Path(__file__).with_name("budgets.json")
+
+
+def load_budgets(path: str | pathlib.Path | None = None) -> dict:
+    """Parse a budgets file (the checked-in default when ``path=None``)."""
+    p = pathlib.Path(path) if path is not None else DEFAULT_BUDGETS_PATH
+    with open(p) as f:
+        budgets = json.load(f)
+    if not isinstance(budgets, dict):
+        raise ValueError(f"{p}: budgets file must be a JSON object")
+    return budgets
+
+
+def default_budgets() -> dict:
+    return load_budgets(None)
+
+
+def resolve_budget(section: dict, name: str) -> dict:
+    """Merge every pattern in ``section`` matching ``name`` (file order,
+    later patterns override). Returns {} when nothing matches."""
+    out: dict = {}
+    for pattern, values in section.items():
+        if fnmatch.fnmatchcase(name, pattern):
+            out.update(values)
+    return out

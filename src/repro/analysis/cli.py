@@ -1,0 +1,110 @@
+"""Static-analysis CLI: ``python -m repro.analysis.cli --check``.
+
+Runs the static rules (primitive budgets, host-sync lint, dtype
+promotion) over every lint entry point, then the engine smoke gates
+(recompile-hazard trace budgets + runtime host-sync sanitizer), prints
+one line per finding, optionally writes a machine-readable JSON
+report, and exits non-zero when anything is over budget.
+
+    python -m repro.analysis.cli --check                 # full gate
+    python -m repro.analysis.cli --check --static-only   # no engine runs
+    python -m repro.analysis.cli --check --json report.json
+    python -m repro.analysis.cli --check --models stablelm-1.6b
+    python -m repro.analysis.cli --list                  # entry points
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from .budgets import load_budgets
+from .entry_points import build_entry_points
+from .recompile import run_host_sync_gate, run_recompile_gate
+from .rules import RULES, run_static_rules
+
+
+def _report(findings, entries, rules, budgets_path) -> dict:
+    return {
+        "version": 1,
+        "passed": not findings,
+        "budgets": str(budgets_path) if budgets_path else "default",
+        "rules": sorted(rules),
+        "entry_points_checked": [e.name for e in entries],
+        "findings": [f.as_dict() for f in findings],
+    }
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.cli", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    ap.add_argument("--check", action="store_true", help="run the lint gate")
+    ap.add_argument("--list", action="store_true", help="list entry points + rules")
+    ap.add_argument("--json", metavar="PATH", help="write the JSON report here")
+    ap.add_argument(
+        "--models", metavar="CSV",
+        help="restrict to these registry models (comma-separated)",
+    )
+    ap.add_argument(
+        "--rules", metavar="CSV",
+        help=f"restrict static rules (available: {', '.join(sorted(RULES))})",
+    )
+    ap.add_argument("--budgets", metavar="PATH", help="override budgets.json")
+    ap.add_argument(
+        "--static-only", action="store_true",
+        help="skip the engine smoke gates (recompile + runtime host-sync)",
+    )
+    ap.add_argument(
+        "--no-kernels", action="store_true",
+        help="skip the standalone Pallas kernel entry points",
+    )
+    args = ap.parse_args(argv)
+
+    models = args.models.split(",") if args.models else None
+    rules = args.rules.split(",") if args.rules else None
+    if rules:
+        unknown = [r for r in rules if r not in RULES]
+        if unknown:
+            ap.error(f"unknown rule(s): {', '.join(unknown)}")
+    entries = build_entry_points(models, include_kernels=not args.no_kernels)
+
+    if args.list:
+        print("rules:")
+        for rule in RULES.values():
+            print(f"  {rule.name}: {rule.description}")
+        print("entry points:")
+        for e in entries:
+            print(f"  {e.name}")
+        return 0
+    if not args.check:
+        ap.error("nothing to do: pass --check (or --list)")
+
+    budgets = load_budgets(args.budgets)
+    findings = list(run_static_rules(entries, budgets, rules))
+    checked_rules = set(rules or RULES)
+    if not args.static_only:
+        print("static rules done; running engine smoke gates...", flush=True)
+        findings += run_recompile_gate(budgets)
+        findings += run_host_sync_gate(budgets)
+        checked_rules |= {"recompile-budget", "host-sync"}
+
+    report = _report(findings, entries, checked_rules, args.budgets)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2)
+            f.write("\n")
+    for f in findings:
+        print(f"FAIL {f}")
+    n = len(entries)
+    if findings:
+        print(f"analysis: {len(findings)} finding(s) over {n} entry points")
+        return 1
+    print(f"analysis: OK ({n} entry points, rules: {', '.join(sorted(checked_rules))})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

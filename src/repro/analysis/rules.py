@@ -1,0 +1,192 @@
+"""Rule registry + the shipped static rules.
+
+A rule is a named check over one :class:`~.entry_points.EntryPoint`'s
+jaxpr, parameterized by the budgets file. Rules return
+:class:`Finding`s — one per violation, always naming the rule and the
+entry point — and the CLI aggregates them into the JSON report.
+
+Registering a new rule::
+
+    @register_rule("my-rule", "one-line description")
+    def my_rule(entry, budgets):
+        return [Finding("my-rule", entry.name, "...")] if bad else []
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+from .budgets import resolve_budget
+from .walker import iter_eqns, primitive_counts
+
+__all__ = ["Finding", "Rule", "RULES", "register_rule", "run_static_rules"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation, machine-readable for the JSON report."""
+
+    rule: str
+    entry_point: str
+    message: str
+    measured: int | None = None
+    budget: int | None = None
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def __str__(self) -> str:
+        extra = (
+            f" (measured {self.measured}, budget {self.budget})"
+            if self.measured is not None
+            else ""
+        )
+        return f"[{self.rule}] {self.entry_point}: {self.message}{extra}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    name: str
+    description: str
+    check: Callable  # (EntryPoint, budgets: dict) -> list[Finding]
+
+
+RULES: dict[str, Rule] = {}
+
+
+def register_rule(name: str, description: str):
+    def wrap(fn):
+        RULES[name] = Rule(name, description, fn)
+        return fn
+
+    return wrap
+
+
+def run_static_rules(
+    entries, budgets: dict, rules: list[str] | None = None
+) -> list[Finding]:
+    """Every selected rule over every entry point, findings aggregated."""
+    selected = [RULES[r] for r in rules] if rules is not None else list(RULES.values())
+    findings: list[Finding] = []
+    for entry in entries:
+        for rule in selected:
+            findings.extend(rule.check(entry, budgets))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# primitive-budget: per-entry-point primitive count ceilings
+# ---------------------------------------------------------------------------
+
+@register_rule(
+    "primitive-budget",
+    "per-entry-point primitive count ceilings (zero pool gathers in "
+    "Pallas paged paths, bounded scatter/convert counts)",
+)
+def primitive_budget(entry, budgets: dict) -> list[Finding]:
+    section = budgets.get("primitive_budgets", {})
+    limits = resolve_budget(section, entry.name)
+    if not limits:
+        return []
+    counts = primitive_counts(entry.jaxpr)
+    findings = []
+    for prim, max_count in sorted(limits.items()):
+        measured = counts.get(prim, 0)
+        if measured > max_count:
+            findings.append(
+                Finding(
+                    "primitive-budget",
+                    entry.name,
+                    f"primitive '{prim}' over budget",
+                    measured=measured,
+                    budget=max_count,
+                )
+            )
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# host-sync: no host round-trip primitives inside jitted entry points
+# ---------------------------------------------------------------------------
+
+_DEFAULT_FORBIDDEN = (
+    "pure_callback",
+    "io_callback",
+    "debug_callback",
+    "debug_print",
+    "infeed",
+    "outfeed",
+    "host_callback_call",
+)
+
+
+@register_rule(
+    "host-sync",
+    "statically forbid io_callback/debug_callback-style host round-trips "
+    "inside jitted serving entry points",
+)
+def host_sync(entry, budgets: dict) -> list[Finding]:
+    section = budgets.get("host_sync", {})
+    forbidden = set(section.get("forbidden_primitives", _DEFAULT_FORBIDDEN))
+    findings = []
+    for path, eqn in iter_eqns(entry.jaxpr):
+        name = eqn.primitive.name
+        if name in forbidden:
+            where = " -> ".join(path) or "<top level>"
+            findings.append(
+                Finding(
+                    "host-sync",
+                    entry.name,
+                    f"host-callback primitive '{name}' inside jitted entry "
+                    f"point (at {where}) — a hidden device->host sync per "
+                    "dispatch",
+                )
+            )
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# dtype-promotion: bounded silent upcasts narrow -> fp32
+# ---------------------------------------------------------------------------
+
+_DEFAULT_NARROW = ("bfloat16", "float16", "int8", "uint8")
+
+
+@register_rule(
+    "dtype-promotion",
+    "bound silent upcasts from bf16/fp16/int8 to fp32 (LSE accumulators "
+    "and per-row KV scale dequant are budgeted; anything beyond fails)",
+)
+def dtype_promotion(entry, budgets: dict) -> list[Finding]:
+    section = budgets.get("dtype_promotion", {})
+    limits = resolve_budget(section.get("budgets", {}), entry.name)
+    if "max_upcasts" not in limits:
+        return []
+    narrow = {jnp.dtype(d) for d in section.get("narrow", _DEFAULT_NARROW)}
+    wide = jnp.dtype(jnp.float32)
+    upcasts: list[str] = []
+    for path, eqn in iter_eqns(entry.jaxpr):
+        if eqn.primitive.name != "convert_element_type":
+            continue
+        new_dtype = eqn.params.get("new_dtype")
+        if new_dtype is None or jnp.dtype(new_dtype) != wide:
+            continue
+        old = eqn.invars[0].aval.dtype
+        if jnp.dtype(old) in narrow:
+            upcasts.append(f"{old}->f32 at {' -> '.join(path) or '<top level>'}")
+    budget = int(limits["max_upcasts"])
+    if len(upcasts) > budget:
+        head = "; ".join(upcasts[:6]) + ("; ..." if len(upcasts) > 6 else "")
+        return [
+            Finding(
+                "dtype-promotion",
+                entry.name,
+                f"narrow->fp32 upcasts over budget ({head})",
+                measured=len(upcasts),
+                budget=budget,
+            )
+        ]
+    return []

@@ -1,4 +1,29 @@
 from . import hw
-from .analysis import HloCost, RooflineTerms, analyze_hlo, roofline_terms
+from .analysis import (
+    Computation,
+    HloCost,
+    Op,
+    RooflineTerms,
+    analyze_hlo,
+    call_multipliers,
+    callees,
+    parse_computations,
+    roofline_terms,
+    top_contributors,
+    trip_count,
+)
 
-__all__ = ["hw", "HloCost", "RooflineTerms", "analyze_hlo", "roofline_terms"]
+__all__ = [
+    "hw",
+    "Computation",
+    "HloCost",
+    "Op",
+    "RooflineTerms",
+    "analyze_hlo",
+    "call_multipliers",
+    "callees",
+    "parse_computations",
+    "roofline_terms",
+    "top_contributors",
+    "trip_count",
+]

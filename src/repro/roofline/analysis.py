@@ -27,15 +27,21 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from collections import defaultdict
 
 from . import hw
 
 __all__ = [
-    "RooflineTerms",
+    "Computation",
     "HloCost",
+    "Op",
+    "RooflineTerms",
     "analyze_hlo",
+    "call_multipliers",
+    "callees",
+    "parse_computations",
     "roofline_terms",
+    "top_contributors",
+    "trip_count",
 ]
 
 _DTYPE_BYTES = {
@@ -90,7 +96,9 @@ def _all_shape_bytes(text: str) -> int:
 
 
 @dataclasses.dataclass
-class _Op:
+class Op:
+    """One HLO instruction: ``%name = <result_type> kind(operands), ...``."""
+
     name: str
     kind: str
     line: str
@@ -99,22 +107,28 @@ class _Op:
 
 
 @dataclasses.dataclass
-class _Computation:
+class Computation:
+    """One parsed HLO computation block (ENTRY is also under ``__entry__``)."""
+
     name: str
     ops: list
     types: dict = dataclasses.field(default_factory=dict)  # value -> type str
 
 
-def _parse_computations(hlo: str) -> dict[str, _Computation]:
-    comps: dict[str, _Computation] = {}
-    current: _Computation | None = None
+def parse_computations(hlo: str) -> dict[str, Computation]:
+    """Parse post-optimization HLO text into named computation blocks.
+
+    The ENTRY computation is additionally keyed ``"__entry__"``.
+    """
+    comps: dict[str, Computation] = {}
+    current: Computation | None = None
     for raw in hlo.splitlines():
         line = raw.strip()
         if not line:
             continue
         header = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\{$", line)
         if header and ("->" in line or line.startswith("ENTRY")):
-            current = _Computation(header.group(1), [])
+            current = Computation(header.group(1), [])
             comps[current.name] = current
             if line.startswith("ENTRY"):
                 comps["__entry__"] = current
@@ -150,13 +164,13 @@ def _parse_computations(hlo: str) -> dict[str, _Computation]:
                     end = j
                     break
         operands = tuple(re.findall(r"%([\w.\-]+)", args[:end]))
-        op = _Op(m.group(1), kind, line, result_type, operands)
+        op = Op(m.group(1), kind, line, result_type, operands)
         current.ops.append(op)
         current.types[op.name] = result_type
     return comps
 
 
-def _callees(op: _Op) -> dict[str, str]:
+def callees(op: Op) -> dict[str, str]:
     """callee name -> edge kind ('fusion'|'control'|'call')."""
     out = {}
     for key, val in re.findall(r"(calls|to_apply|body|condition)=%?([\w.\-]+)", op.line):
@@ -169,7 +183,7 @@ def _callees(op: _Op) -> dict[str, str]:
     return out
 
 
-def _trip_count(comps: dict, while_op: _Op, cond_name: str | None) -> int:
+def trip_count(comps: dict, while_op: Op, cond_name: str | None) -> int:
     """Loop trip count: backend_config known_trip_count when present,
     else the loop bound from the condition's compare constant(s)."""
     tm = re.search(r'known_trip_count[^0-9]*(\d+)', while_op.line)
@@ -187,12 +201,12 @@ def _trip_count(comps: dict, while_op: _Op, cond_name: str | None) -> int:
             cm = re.search(r"[su]32\[\]\s+constant\((\d+)\)", op.line)
             if cm:
                 consts.append(int(cm.group(1)))
-            for callee in _callees(op):
+            for callee in callees(op):
                 stack.append(callee)
     return max(consts) if consts else 1
 
 
-def _operand_dims(comp: _Computation, op: _Op, idx: int) -> list[int] | None:
+def _operand_dims(comp: Computation, op: Op, idx: int) -> list[int] | None:
     if idx >= len(op.operands):
         return None
     t = comp.types.get(op.operands[idx])
@@ -202,7 +216,7 @@ def _operand_dims(comp: _Computation, op: _Op, idx: int) -> list[int] | None:
     return sh[1] if sh else None
 
 
-def _dot_flops(comp: _Computation, op: _Op) -> float:
+def _dot_flops(comp: Computation, op: Op) -> float:
     out = _shape_dims(op.result_type)
     if out is None:
         return 0.0
@@ -221,7 +235,7 @@ def _dot_flops(comp: _Computation, op: _Op) -> float:
     return 2.0 * n_out * contract
 
 
-def _conv_flops(comp: _Computation, op: _Op) -> float:
+def _conv_flops(comp: Computation, op: Op) -> float:
     out = _shape_dims(op.result_type)
     if out is None:
         return 0.0
@@ -241,7 +255,7 @@ def _conv_flops(comp: _Computation, op: _Op) -> float:
     return 2.0 * n_out * kernel / max(out_ch, 1)
 
 
-def _op_bytes(comp: _Computation, op: _Op) -> float:
+def _op_bytes(comp: Computation, op: Op) -> float:
     """HBM traffic of a top-level op: output write + operand reads.
 
     Special cases:
@@ -286,16 +300,24 @@ class HloCost:
     collectives: dict = dataclasses.field(default_factory=dict)
 
 
-def analyze_hlo(hlo: str) -> HloCost:
-    comps = _parse_computations(hlo)
-    if "__entry__" not in comps:
-        return HloCost()
+def call_multipliers(
+    comps: dict[str, Computation],
+) -> tuple[dict[str, float], dict[str, bool]]:
+    """Call multiplicity and fusion-internality per computation.
 
-    # Multiplier per computation (sum over call sites), propagated in
-    # topological order (Kahn) — a BFS can visit a computation before all
-    # of its callers' multipliers have accumulated.
+    Returns ``(mult, fused)``: ``mult[name]`` is the number of times the
+    computation executes per ENTRY invocation (trip-scaled across
+    ``while`` bodies); ``fused[name]`` is True when *every* call site is
+    fusion-internal (the computation never materializes HBM traffic of
+    its own). Propagated in topological order (Kahn) — a BFS can visit
+    a computation before all of its callers' multipliers have
+    accumulated. Shared by :func:`analyze_hlo` and
+    :func:`top_contributors` (and ``scripts/hlo_top.py``).
+    """
     from collections import deque
 
+    if "__entry__" not in comps:
+        return {}, {}
     entry = comps["__entry__"].name
     names = [n for n in comps if n != "__entry__"]
 
@@ -304,12 +326,12 @@ def analyze_hlo(hlo: str) -> HloCost:
     in_deg: dict[str, int] = {n: 0 for n in names}
     for name in names:
         for op in comps[name].ops:
-            callees = _callees(op)
+            edges = callees(op)
             trip = None
             if op.kind == "while":
-                cond = next((c for c, k in callees.items() if k == "condition"), None)
-                trip = _trip_count(comps, op, cond)
-            for callee, kind in callees.items():
+                cond = next((c for c, k in edges.items() if k == "condition"), None)
+                trip = trip_count(comps, op, cond)
+            for callee, kind in edges.items():
                 if callee not in in_deg:
                     continue
                 if kind == "condition":
@@ -341,6 +363,14 @@ def analyze_hlo(hlo: str) -> HloCost:
             in_deg[callee] -= 1
             if in_deg[callee] == 0:
                 q.append(callee)
+    return mult, {n: bool(v) for n, v in fused.items()}
+
+
+def analyze_hlo(hlo: str) -> HloCost:
+    comps = parse_computations(hlo)
+    if "__entry__" not in comps:
+        return HloCost()
+    mult, fused = call_multipliers(comps)
 
     cost = HloCost(collectives={k: {"count": 0, "bytes": 0.0} for k in _COLLECTIVES})
     for name, comp in comps.items():
@@ -434,3 +464,56 @@ def roofline_terms(hlo_text: str, chips: int) -> tuple[RooflineTerms, HloCost]:
         chips=chips,
     )
     return terms, cost
+
+
+def top_contributors(
+    hlo: str, mode: str = "bytes", limit: int | None = None
+) -> list[tuple[float, str, str]]:
+    """Trip-scaled per-op contributors, largest first.
+
+    ``mode``: ``"bytes"`` (HBM traffic of top-level ops), ``"flops"``
+    (dot/convolution FLOPs), or ``"coll"`` (collective payload bytes).
+    Returns ``(value, op_kind, hlo_line)`` tuples — the drill-down view
+    behind ``scripts/hlo_top.py``, sharing :func:`call_multipliers` with
+    :func:`analyze_hlo` so both always agree on loop trip scaling.
+    """
+    if mode not in ("bytes", "flops", "coll"):
+        raise ValueError(f"unknown mode {mode!r} (expected bytes|flops|coll)")
+    comps = parse_computations(hlo)
+    if "__entry__" not in comps:
+        return []
+    mult, fused = call_multipliers(comps)
+    contrib: list[tuple[float, str, str]] = []
+    for name, comp in comps.items():
+        if name == "__entry__":
+            continue
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        for op in comp.ops:
+            if mode == "flops":
+                if op.kind == "dot":
+                    v = m * _dot_flops(comp, op)
+                elif op.kind == "convolution":
+                    v = m * _conv_flops(comp, op)
+                else:
+                    continue
+            elif mode == "coll":
+                base = op.kind[:-6] if op.kind.endswith("-start") else op.kind
+                if base not in _COLLECTIVES or op.kind.endswith("-done"):
+                    continue
+                v = m * _all_shape_bytes(op.result_type)
+            else:
+                if fused.get(name, False) or op.kind in _BYTE_FREE:
+                    continue
+                v = m * _op_bytes(comp, op)
+            if v > 0:
+                contrib.append((v, op.kind, op.line))
+    contrib.sort(key=lambda t: -t[0])
+    return contrib[:limit] if limit is not None else contrib
+
+
+# Back-compat aliases for the pre-public-API names.
+_parse_computations = parse_computations
+_callees = callees
+_trip_count = trip_count

@@ -76,6 +76,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..analysis.sanitizer import host_readback, mark_engine_step
 from ..core.power import PowerModePolicy, dynamic_policy
 from ..models.registry import Model
 from .budget import ReplicaBudget
@@ -186,7 +187,7 @@ def _emit_whole_outputs(server, g, grp, out, outputs, mgr, length):
     for _, m, _ in grp:
         mgr.lengths[m.slot_ids[g]] = length
     if g == server.G - 1:
-        toks = np.asarray(jnp.argmax(out[:, 0, -1], axis=-1))
+        toks = host_readback(jnp.argmax(out[:, 0, -1], axis=-1))
         for j, (i, _, _) in enumerate(grp):
             outputs[i] = ("token", int(toks[j]), 0)
     else:
@@ -339,7 +340,7 @@ class _DenseExec:
         )
         s._caches[(g, r)] = cache
         s.stats.chunk_prefill_calls += 1
-        toks = np.asarray(jnp.argmax(out[:, 0], axis=-1)) if last else None
+        toks = host_readback(jnp.argmax(out[:, 0], axis=-1)) if last else None
         _emit_chunk_outputs(
             s, g, jobs, outputs, mgr, toks,
             lambda slot, valid: out[slot, :, :valid],  # [1, valid, D]
@@ -383,7 +384,7 @@ class _DenseExec:
         for _, m in jobs:
             mgr.lengths[m.slot_ids[g]] += 1
         if last:
-            toks = np.asarray(jnp.argmax(out[:, 0, -1], axis=-1))
+            toks = host_readback(jnp.argmax(out[:, 0, -1], axis=-1))
             for i, m in jobs:
                 outputs[i] = ("token", int(toks[m.slot_ids[g]]), 0)
         else:
@@ -541,7 +542,7 @@ class _PagedExec:
             for _, m, _ in grp:
                 mgr.lengths[m.slot_ids[g]] = length
             if last:
-                toks = np.asarray(jnp.argmax(out[:, length - 1], axis=-1))
+                toks = host_readback(jnp.argmax(out[:, length - 1], axis=-1))
                 for j, (i, _, _) in enumerate(grp):
                     outputs[i] = ("token", int(toks[j]), 0)
             else:
@@ -586,7 +587,7 @@ class _PagedExec:
         )
         s._caches[(g, r)] = cache
         s.stats.chunk_prefill_calls += 1
-        toks = np.asarray(jnp.argmax(out, axis=-1)) if last else None
+        toks = host_readback(jnp.argmax(out, axis=-1)) if last else None
         _emit_chunk_outputs(
             s, g, jobs, outputs, mgr, toks,
             lambda slot, valid: out[slot, :valid][None],  # [1, valid, D]
@@ -635,7 +636,7 @@ class _PagedExec:
         for _, m in jobs:
             mgr.lengths[m.slot_ids[g]] += 1
         if last:
-            toks = np.asarray(jnp.argmax(out[:, 0], axis=-1))
+            toks = host_readback(jnp.argmax(out[:, 0], axis=-1))
             for i, m in jobs:
                 outputs[i] = ("token", int(toks[m.slot_ids[g]]), 0)
         else:
@@ -988,6 +989,10 @@ class PipelineServer:
                 del self._calls[(g, r)]
                 for m, out in zip(call.members, call.outputs):
                     self._commit(m, out, g)
+
+        # 7) close this slot's device->host sync bucket (no-op unless a
+        #    repro.analysis TransferSanitizer is active)
+        mark_engine_step()
 
     # ------------------------------------------------------------------
     def fail_replica(self, g: int, r: int) -> None:

@@ -1,0 +1,374 @@
+"""Static-analysis subsystem tests: jaxpr walker, budget resolution,
+rule registry, recompile/host-sync gates, and the CLI.
+
+The injected-violation tests are the acceptance criteria: a gather in a
+Pallas paged path, a forced per-step host sync, or a reintroduced
+prompt-length-dependent re-jit must each fail with a named rule and
+entry point."""
+
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import tiny_model
+
+from repro.analysis import (
+    EntryPoint,
+    Finding,
+    HostSyncError,
+    TransferSanitizer,
+    build_entry_points,
+    check_trace_budgets,
+    count_primitive,
+    host_readback,
+    iter_eqns,
+    load_budgets,
+    primitive_counts,
+    register_rule,
+    resolve_budget,
+    run_static_rules,
+)
+from repro.analysis import rules as rules_mod
+from repro.analysis.cli import main as cli_main
+
+
+def entry_for(fn, *args, name="toy:kind:variant"):
+    """A lint entry point over an ad-hoc traced function."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    model, kind, variant = name.split(":")
+    return EntryPoint(name, model, kind, variant, lambda: jaxpr)
+
+
+class TestWalker:
+    def test_counts_toplevel(self):
+        j = jax.make_jaxpr(lambda x: jnp.sin(jnp.sin(x)))(1.0)
+        assert count_primitive(j, "sin") == 2
+        assert primitive_counts(j)["sin"] == 2
+
+    def test_recurses_into_scan(self):
+        def f(x):
+            return jax.lax.scan(lambda c, _: (jnp.sin(c), ()), x, None, length=3)[0]
+
+        j = jax.make_jaxpr(f)(1.0)
+        assert count_primitive(j, "sin") == 1
+        paths = [p for p, e in iter_eqns(j) if e.primitive.name == "sin"]
+        assert paths == [("scan",)]
+
+    def test_recurses_into_cond(self):
+        def f(x):
+            return jax.lax.cond(x > 0, jnp.sin, jnp.cos, x)
+
+        j = jax.make_jaxpr(f)(1.0)
+        assert count_primitive(j, "sin") == 1
+        assert count_primitive(j, "cos") == 1
+
+    def test_recurses_into_pallas_kernel_body(self):
+        """pallas_call carries a raw (non-closed) kernel jaxpr — the
+        walker must descend into it."""
+        from repro.kernels.decode_attention import PALLAS_PAGED_KERNELS
+
+        fn = PALLAS_PAGED_KERNELS["paged_decode_attention"]
+        B, KV, G, D, page, NB = 2, 2, 2, 8, 8, 3
+        j = jax.make_jaxpr(fn)(
+            jax.ShapeDtypeStruct((B, 1, KV * G, D), jnp.float32),
+            jax.ShapeDtypeStruct((B * NB + 1, page, KV, D), jnp.float32),
+            jax.ShapeDtypeStruct((B * NB + 1, page, KV, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, NB), jnp.int32),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+        )
+        assert count_primitive(j, "pallas_call") == 1
+        inside = [p for p, e in iter_eqns(j) if "pallas_call" in p]
+        assert inside  # kernel body equations were visited
+        assert count_primitive(j, "gather") == 0
+
+
+class TestBudgets:
+    def test_default_budgets_load(self):
+        b = load_budgets()
+        for section in ("primitive_budgets", "host_sync", "dtype_promotion",
+                        "trace_budgets"):
+            assert section in b
+        assert b["primitive_budgets"]  # real ceilings, not placeholders
+
+    def test_resolve_merges_in_file_order(self):
+        section = {
+            "*": {"gather": 5, "scatter": 1},
+            "m:*": {"gather": 2},
+            "m:decode:pallas": {"gather": 0},
+        }
+        assert resolve_budget(section, "other:x:y") == {"gather": 5, "scatter": 1}
+        assert resolve_budget(section, "m:prefill:xla") == {"gather": 2, "scatter": 1}
+        assert resolve_budget(section, "m:decode:pallas") == {"gather": 0, "scatter": 1}
+
+    def test_no_match_is_empty(self):
+        assert resolve_budget({"a:*": {"gather": 1}}, "b:x:y") == {}
+
+
+class TestStaticRules:
+    def test_primitive_budget_violation_names_rule_and_entry(self):
+        def two_gathers(x, idx):
+            return jnp.take(x, idx) + jnp.take(x, idx + 1)
+
+        e = entry_for(
+            two_gathers, jnp.zeros((8,)), jnp.asarray([2, 3]),
+            name="toy:decode:pallas",
+        )
+        budgets = {"primitive_budgets": {"toy:decode:pallas": {"gather": 1}}}
+        findings = run_static_rules([e], budgets, rules=["primitive-budget"])
+        assert len(findings) == 1
+        f = findings[0]
+        assert f.rule == "primitive-budget"
+        assert f.entry_point == "toy:decode:pallas"
+        assert f.measured == 2 and f.budget == 1
+        assert "gather" in str(f)
+
+    def test_within_budget_is_clean(self):
+        e = entry_for(lambda x: x + 1, jnp.zeros((4,)))
+        budgets = {"primitive_budgets": {"*": {"gather": 0}}}
+        assert run_static_rules([e], budgets, rules=["primitive-budget"]) == []
+
+    def test_host_sync_flags_debug_callback(self):
+        def leaky(x):
+            jax.debug.print("x={x}", x=x)
+            return x * 2
+
+        e = entry_for(leaky, jnp.zeros((2,)), name="toy:decode:dense")
+        findings = run_static_rules([e], {}, rules=["host-sync"])
+        assert findings and findings[0].rule == "host-sync"
+        assert findings[0].entry_point == "toy:decode:dense"
+
+    def test_dtype_promotion_over_budget(self):
+        def upcasts(x):
+            return x.astype(jnp.float32).sum() + x.astype(jnp.float32).prod()
+
+        e = entry_for(upcasts, jnp.zeros((4,), jnp.bfloat16), name="toy:p:d")
+        budgets = {"dtype_promotion": {"budgets": {"toy:*": {"max_upcasts": 1}}}}
+        findings = run_static_rules([e], budgets, rules=["dtype-promotion"])
+        assert findings and findings[0].rule == "dtype-promotion"
+        assert findings[0].measured == 2 and findings[0].budget == 1
+
+    def test_dtype_promotion_unbudgeted_entry_skipped(self):
+        e = entry_for(
+            lambda x: x.astype(jnp.float32), jnp.zeros((4,), jnp.bfloat16)
+        )
+        assert run_static_rules([e], {}, rules=["dtype-promotion"]) == []
+
+    def test_register_rule_runs(self):
+        name = "test-only-rule"
+        try:
+            @register_rule(name, "always fires")
+            def always(entry, budgets):
+                return [Finding(name, entry.name, "boom")]
+
+            e = entry_for(lambda x: x, 1.0)
+            findings = run_static_rules([e], {}, rules=[name])
+            assert [f.rule for f in findings] == [name]
+        finally:
+            rules_mod.RULES.pop(name, None)
+
+
+class TestInjectedGather:
+    """Acceptance: a pool gather injected into a Pallas paged path fails
+    the default budgets with the rule and entry point named."""
+
+    def test_gather_injected_into_pallas_paged_path(self):
+        cfg, model, _ = tiny_model()
+        cfg = dataclasses.replace(cfg, attn_impl="pallas")
+        from repro.models import build_model as _build
+
+        model = _build(cfg)
+        from repro.models.common import abstract_params
+
+        W, NB, page, P = 4, 4, 16, 16
+        params = abstract_params(model.template, cfg.param_dtype)
+        tok = jax.ShapeDtypeStruct((W, 1), jnp.int32)
+        pools = {
+            "k": jax.ShapeDtypeStruct(
+                (cfg.n_layers, P + 1, page, cfg.n_kv_heads, cfg.head_dim),
+                jnp.dtype(cfg.dtype)),
+            "v": jax.ShapeDtypeStruct(
+                (cfg.n_layers, P + 1, page, cfg.n_kv_heads, cfg.head_dim),
+                jnp.dtype(cfg.dtype)),
+        }
+        lens = jax.ShapeDtypeStruct((W,), jnp.int32)
+        bt = jax.ShapeDtypeStruct((W, NB), jnp.int32)
+
+        def with_injected_gather(p, t, pl, ln, b):
+            # The regression under test: materializing pool pages with an
+            # XLA gather instead of walking them inside the kernel.
+            leaked = jnp.take(pl["k"], b.reshape(-1), axis=1)
+            out, pl2 = model.decode_paged(p, t, pl, ln, b)
+            return out + leaked.sum().astype(out.dtype) * 0, pl2
+
+        jaxpr = jax.make_jaxpr(with_injected_gather)(params, tok, pools, lens, bt)
+        name = "stablelm-1.6b:decode_step_paged:pallas"
+        e = EntryPoint(name, "stablelm-1.6b", "decode_step_paged", "pallas",
+                       lambda: jaxpr)
+        findings = run_static_rules([e], load_budgets(), rules=["primitive-budget"])
+        gather = [f for f in findings if "gather" in f.message]
+        assert gather, "injected gather must fail the default budgets"
+        assert gather[0].rule == "primitive-budget"
+        assert gather[0].entry_point == name
+        assert gather[0].measured > gather[0].budget == 2
+
+
+class TestRecompileGate:
+    def test_shape_dependent_rejit_flagged(self):
+        """Synthetic trace_counts with a prompt-length-keyed chunk
+        dispatch: two compiled shapes for one stage -> finding."""
+        counts = {
+            ("chunk", 0, 4, 8): 3,
+            ("chunk", 0, 4, 12): 2,  # second shape: length-keyed re-jit
+            ("decode", 0, 4): 5,
+        }
+        budgets = {"trace_budgets": {"chunk": {"max_shapes_per_stage": 1},
+                                     "decode": {"max_shapes_per_stage": 1}}}
+        findings = check_trace_budgets(counts, budgets, context="dense")
+        assert len(findings) == 1
+        f = findings[0]
+        assert f.rule == "recompile-budget"
+        assert f.entry_point == "dense:chunk:stage0"
+        assert f.measured == 2 and f.budget == 1
+
+    def test_within_budget_clean(self):
+        counts = {("decode", 0, 4): 9, ("decode", 1, 4): 9}
+        budgets = {"trace_budgets": {"decode": {"max_shapes_per_stage": 1}}}
+        assert check_trace_budgets(counts, budgets) == []
+
+
+class TestSanitizer:
+    def test_host_readback_inactive_is_plain_asarray(self):
+        out = host_readback(jnp.arange(3))
+        assert isinstance(out, np.ndarray)
+        assert out.tolist() == [0, 1, 2]
+
+    def test_counts_sanctioned_per_step(self):
+        x = jnp.arange(4.0)
+        with TransferSanitizer() as san:
+            host_readback(x)
+            host_readback(x)
+            san.mark_step()
+            host_readback(x)
+            san.mark_step()
+        assert san.per_step == [2, 1]
+        assert san.max_per_step == 2
+        assert san.sanctioned_total == 3
+        assert san.unsanctioned_total == 0
+
+    def test_unsanctioned_int_counted(self):
+        x = jnp.asarray(7)
+        with TransferSanitizer() as san:
+            assert int(x) == 7
+        assert san.unsanctioned_total == 1
+
+    def test_strict_raises_on_unsanctioned(self):
+        x = jnp.asarray(1.0)
+        with TransferSanitizer(strict=True):
+            with pytest.raises(HostSyncError):
+                float(x)
+
+    def test_no_nesting(self):
+        with TransferSanitizer():
+            with pytest.raises(RuntimeError):
+                TransferSanitizer().__enter__()
+
+    def test_trailing_partial_step_flushed(self):
+        with TransferSanitizer() as san:
+            host_readback(jnp.zeros(()))
+        assert san.per_step == [1]
+
+
+@pytest.mark.slow
+class TestEngineSyncRegression:
+    """Satellite acceptance: dense and paged replica-steps stay within
+    the per-step device->host budget, and the count is exactly the
+    batched-argmax-readback minimum (one sanctioned sync per last-stage
+    dispatch, nothing unsanctioned)."""
+
+    def _server(self, paged):
+        from repro.serving import PipelineServer
+
+        cfg, model, params = tiny_model()
+        server = PipelineServer(
+            model, params, n_groups=1, n_replicas=1, policy="uniform",
+            harvest_bounds=(60.0, 80.0), max_len=64, max_batch=4,
+            paged=paged, page_size=8, prefill_chunk=4, seed=0,
+        )
+        return cfg, server
+
+    def _drain(self, server, cfg, n_requests=4, n_tokens=3):
+        reqs = [
+            server.submit((np.arange(4 + 2 * (i % 2)) + i) % cfg.vocab_size,
+                          n_tokens=n_tokens)
+            for i in range(n_requests)
+        ]
+        while not all(r.done for r in reqs):
+            server.step()
+
+    @pytest.mark.parametrize("paged", [False, True], ids=["dense", "paged"])
+    def test_step_syncs_at_argmax_minimum(self, paged):
+        budgets = load_budgets()
+        budget = budgets["host_sync"]["per_step_budget"]["paged" if paged else "dense"]
+        cfg, server = self._server(paged)
+        self._drain(server, cfg)  # warmup: compile all dispatch shapes
+        st = server.stats
+        calls_before = (st.prefill_calls + st.chunk_prefill_calls
+                        + st.decode_calls)
+        with TransferSanitizer() as san:
+            self._drain(server, cfg)
+        calls = (st.prefill_calls + st.chunk_prefill_calls
+                 + st.decode_calls) - calls_before
+        assert san.unsanctioned_total == 0
+        assert san.max_per_step <= budget
+        # G=1: every dispatch is the last stage -> exactly one batched
+        # argmax readback each. Any extra per-step sync fails here.
+        assert san.sanctioned_total == calls
+
+
+class TestCli:
+    def test_list(self, capsys):
+        assert cli_main(["--list", "--models", "stablelm-1.6b"]) == 0
+        out = capsys.readouterr().out
+        assert "primitive-budget" in out
+        assert "stablelm-1.6b:decode_step_paged:pallas" in out
+
+    def test_static_check_passes_and_reports(self, tmp_path, capsys):
+        report_path = tmp_path / "report.json"
+        rc = cli_main([
+            "--check", "--static-only", "--models", "stablelm-1.6b",
+            "--no-kernels", "--json", str(report_path),
+        ])
+        assert rc == 0
+        report = json.loads(report_path.read_text())
+        assert report["passed"] is True
+        assert report["findings"] == []
+        assert "stablelm-1.6b:decode_step_paged:pallas" in report[
+            "entry_points_checked"]
+
+    def test_tightened_budgets_fail_with_named_finding(self, tmp_path, capsys):
+        budgets = load_budgets()
+        tight = json.loads(json.dumps(budgets))
+        tight["primitive_budgets"]["*:decode_step_paged:pallas"]["gather"] = 0
+        path = tmp_path / "tight.json"
+        path.write_text(json.dumps(tight))
+        report_path = tmp_path / "report.json"
+        rc = cli_main([
+            "--check", "--static-only", "--models", "stablelm-1.6b",
+            "--no-kernels", "--budgets", str(path), "--json", str(report_path),
+        ])
+        assert rc == 1
+        report = json.loads(report_path.read_text())
+        assert report["passed"] is False
+        rules = {f["rule"] for f in report["findings"]}
+        entries = {f["entry_point"] for f in report["findings"]}
+        assert "primitive-budget" in rules
+        assert "stablelm-1.6b:decode_step_paged:pallas" in entries
+        out = capsys.readouterr().out
+        assert "FAIL [primitive-budget] stablelm-1.6b:decode_step_paged:pallas" in out
+
+    def test_unknown_rule_rejected(self):
+        with pytest.raises(SystemExit):
+            cli_main(["--check", "--rules", "nope"])

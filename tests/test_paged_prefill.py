@@ -13,6 +13,7 @@ import numpy as np
 import pytest
 from conftest import tiny_model
 
+from repro.analysis import count_primitive
 from repro.kernels.decode_attention import (
     paged_prefill_attention,
     paged_prefill_attention_pallas,
@@ -102,20 +103,6 @@ class TestPagedPrefillKernel:
         assert float(np.max(np.abs(np.asarray(out) - np.asarray(fp)))) < 0.05
 
 
-def _count_primitive(jaxpr, name: str) -> int:
-    """Occurrences of a primitive anywhere in a (closed) jaxpr tree."""
-    n = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == name:
-            n += 1
-        for v in eqn.params.values():
-            for sub in v if isinstance(v, (list, tuple)) else (v,):
-                inner = getattr(sub, "jaxpr", None)
-                if inner is not None:
-                    n += _count_primitive(inner, name)
-    return n
-
-
 class TestNoMaterializedGather:
     """Acceptance: chunked paged prefill no longer materializes a
     ``gather_pages`` copy when the Pallas path is active."""
@@ -151,10 +138,10 @@ class TestNoMaterializedGather:
         # The fallback's gather_pages materializes the prefix: >= 2 XLA
         # gathers (K and V pools). The Pallas path's page walk lives in
         # the kernel's BlockSpec index map — zero gathers in the trace.
-        assert _count_primitive(fallback.jaxpr, "gather") >= 2
-        assert _count_primitive(pallas.jaxpr, "gather") == 0
+        assert count_primitive(fallback.jaxpr, "gather") >= 2
+        assert count_primitive(pallas.jaxpr, "gather") == 0
         # Both still scatter the chunk's K/V into the pool.
-        assert _count_primitive(pallas.jaxpr, "scatter") >= 2
+        assert count_primitive(pallas.jaxpr, "scatter") >= 2
 
 
 class TestPallasChunkModelParity:

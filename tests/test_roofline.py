@@ -7,7 +7,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.roofline.analysis import RooflineTerms, analyze_hlo
+from repro.roofline.analysis import (
+    RooflineTerms,
+    analyze_hlo,
+    call_multipliers,
+    parse_computations,
+    top_contributors,
+)
 
 
 def compile_text(fn, *specs):
@@ -63,6 +69,60 @@ class TestWalker:
     def test_empty_hlo(self):
         c = analyze_hlo("")
         assert c.flops == 0.0
+
+
+class TestPublicApi:
+    """The promoted HLO-walking API (parse_computations /
+    call_multipliers / top_contributors) that scripts/hlo_top.py and
+    analyze_hlo share."""
+
+    def _scan_hlo(self):
+        def f(x, w):
+            def body(c, wi):
+                return c @ wi, ()
+            y, _ = jax.lax.scan(body, x, w)
+            return y
+
+        x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+        w = jax.ShapeDtypeStruct((24, 128, 128), jnp.float32)
+        return compile_text(f, x, w)
+
+    def test_parse_computations_entry(self):
+        comps = parse_computations(self._scan_hlo())
+        assert "__entry__" in comps
+        entry = comps["__entry__"]
+        assert comps[entry.name] is entry
+        assert entry.ops  # ENTRY has instructions
+
+    def test_call_multipliers_trip_scaled(self):
+        """The while body's multiplier carries the trip count."""
+        comps = parse_computations(self._scan_hlo())
+        mult, fused = call_multipliers(comps)
+        assert mult[comps["__entry__"].name] == 1.0
+        assert max(mult.values()) >= 24.0  # loop body runs 24x
+        assert set(fused) == set(mult)
+
+    def test_call_multipliers_empty(self):
+        assert call_multipliers({}) == ({}, {})
+
+    def test_top_contributors_agree_with_analyze_hlo(self):
+        """Drill-down FLOPs sum to the roofline total (shared multiplier
+        propagation — the point of the refactor)."""
+        hlo = self._scan_hlo()
+        dots = sum(v for v, _, _ in top_contributors(hlo, "flops"))
+        assert dots == pytest.approx(2 * 24 * 128**3, rel=0.01)
+        total_bytes = sum(v for v, _, _ in top_contributors(hlo, "bytes"))
+        assert total_bytes == pytest.approx(analyze_hlo(hlo).bytes, rel=1e-9)
+
+    def test_top_contributors_sorted_and_limited(self):
+        hlo = self._scan_hlo()
+        contrib = top_contributors(hlo, "bytes")
+        assert contrib == sorted(contrib, key=lambda t: -t[0])
+        assert top_contributors(hlo, "bytes", limit=2) == contrib[:2]
+
+    def test_top_contributors_bad_mode(self):
+        with pytest.raises(ValueError):
+            top_contributors("", "nope")
 
 
 class TestTerms:
