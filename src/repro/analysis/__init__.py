@@ -22,11 +22,39 @@ Rules shipped out of the box:
   fp32 (LSE accumulators and per-row KV scales are budgeted, anything
   beyond fails);
 * ``recompile-budget`` — per-(kind, stage) compiled-shape budgets over
-  :func:`repro.serving.trace_counts`, enforced after engine smoke runs.
+  :func:`repro.serving.trace_counts`, enforced after engine smoke runs;
+* ``bytes-per-token`` / ``peak-live-bytes`` — the static memory-flow
+  pass (:mod:`.memory`): per-equation byte costs with trip-weighted
+  loop bodies and block-spec DMA accounting for Pallas kernels, plus a
+  liveness-based peak-residency sweep, pinned to measured-exact values
+  in ``budgets.json`` (regenerate with ``cli --update-budgets``);
+* ``kv-page-ratio`` — int8 paged entries must show the ~4x
+  dtype-normalized KV pool byte reduction vs fp32;
+* ``donation`` — the engine's jitted dispatches must donate every
+  cache-sized consumed-and-rebuilt input (``donate_argnums``), checked
+  against the lowered MLIR aliasing attributes and
+  ``compiled.memory_analysis()``.
 """
 
 from .budgets import default_budgets, load_budgets, resolve_budget
 from .entry_points import EntryPoint, build_entry_points
+from .memory import (
+    DispatchReport,
+    MemoryStats,
+    analyze_dispatch,
+    aval_bytes,
+    entry_memory,
+    eqn_bytes,
+    io_bytes,
+    memory_report,
+    memory_section,
+    pallas_dma_bytes,
+    peak_live_bytes,
+    run_donation_gate,
+    transfer_bytes,
+    update_memory_budgets,
+    while_trip_count,
+)
 from .recompile import check_trace_budgets, run_host_sync_gate, run_recompile_gate
 from .rules import RULES, Finding, Rule, register_rule, run_static_rules
 from .sanitizer import (
@@ -38,25 +66,40 @@ from .sanitizer import (
 from .walker import count_primitive, iter_eqns, primitive_counts, subjaxprs
 
 __all__ = [
+    "DispatchReport",
     "EntryPoint",
     "Finding",
     "HostSyncError",
+    "MemoryStats",
     "RULES",
     "Rule",
     "TransferSanitizer",
     "active_sanitizer",
+    "analyze_dispatch",
+    "aval_bytes",
     "build_entry_points",
     "check_trace_budgets",
     "count_primitive",
     "default_budgets",
+    "entry_memory",
+    "eqn_bytes",
     "host_readback",
+    "io_bytes",
     "iter_eqns",
     "load_budgets",
+    "memory_report",
+    "memory_section",
+    "pallas_dma_bytes",
+    "peak_live_bytes",
     "primitive_counts",
     "register_rule",
     "resolve_budget",
+    "run_donation_gate",
     "run_host_sync_gate",
     "run_recompile_gate",
     "run_static_rules",
     "subjaxprs",
+    "transfer_bytes",
+    "update_memory_budgets",
+    "while_trip_count",
 ]

@@ -1,15 +1,18 @@
 """Static-analysis CLI: ``python -m repro.analysis.cli --check``.
 
 Runs the static rules (primitive budgets, host-sync lint, dtype
-promotion) over every lint entry point, then the engine smoke gates
-(recompile-hazard trace budgets + runtime host-sync sanitizer), prints
-one line per finding, optionally writes a machine-readable JSON
-report, and exits non-zero when anything is over budget.
+promotion, memory-flow budgets) over every lint entry point, then the
+engine smoke gates (recompile-hazard trace budgets + runtime host-sync
+sanitizer + KV donation lint), prints one line per finding, optionally
+writes a machine-readable JSON report (including a ``memory`` section
+with per-entry ``bytes_per_token`` / ``peak_live_bytes``), and exits
+non-zero when anything is over budget.
 
     python -m repro.analysis.cli --check                 # full gate
     python -m repro.analysis.cli --check --static-only   # no engine runs
     python -m repro.analysis.cli --check --json report.json
     python -m repro.analysis.cli --check --models stablelm-1.6b
+    python -m repro.analysis.cli --update-budgets        # refresh memory_budgets
     python -m repro.analysis.cli --list                  # entry points
 """
 
@@ -19,20 +22,22 @@ import argparse
 import json
 import sys
 
-from .budgets import load_budgets
+from .budgets import DEFAULT_BUDGETS_PATH, load_budgets
 from .entry_points import build_entry_points
+from .memory import memory_section, run_donation_gate, update_memory_budgets
 from .recompile import run_host_sync_gate, run_recompile_gate
 from .rules import RULES, run_static_rules
 
 
 def _report(findings, entries, rules, budgets_path) -> dict:
     return {
-        "version": 1,
+        "version": 2,
         "passed": not findings,
         "budgets": str(budgets_path) if budgets_path else "default",
         "rules": sorted(rules),
         "entry_points_checked": [e.name for e in entries],
         "findings": [f.as_dict() for f in findings],
+        "memory": memory_section(entries),
     }
 
 
@@ -61,6 +66,11 @@ def main(argv: list[str] | None = None) -> int:
         "--no-kernels", action="store_true",
         help="skip the standalone Pallas kernel entry points",
     )
+    ap.add_argument(
+        "--update-budgets", action="store_true",
+        help="regenerate the measured-exact memory_budgets section of "
+        "budgets.json in place and exit",
+    )
     args = ap.parse_args(argv)
 
     models = args.models.split(",") if args.models else None
@@ -79,6 +89,17 @@ def main(argv: list[str] | None = None) -> int:
         for e in entries:
             print(f"  {e.name}")
         return 0
+    if args.update_budgets:
+        # Regenerate against the *full* matrix regardless of filters so a
+        # partial run can never silently shrink the committed section.
+        path = args.budgets or DEFAULT_BUDGETS_PATH
+        budgets = load_budgets(path)
+        update_memory_budgets(budgets, build_entry_points())
+        with open(path, "w") as f:
+            json.dump(budgets, f, indent=2, ensure_ascii=False)
+            f.write("\n")
+        print(f"memory_budgets regenerated in {path}")
+        return 0
     if not args.check:
         ap.error("nothing to do: pass --check (or --list)")
 
@@ -89,7 +110,9 @@ def main(argv: list[str] | None = None) -> int:
         print("static rules done; running engine smoke gates...", flush=True)
         findings += run_recompile_gate(budgets)
         findings += run_host_sync_gate(budgets)
-        checked_rules |= {"recompile-budget", "host-sync"}
+        _, donation_findings = run_donation_gate(budgets)
+        findings += donation_findings
+        checked_rules |= {"recompile-budget", "host-sync", "donation"}
 
     report = _report(findings, entries, checked_rules, args.budgets)
     if args.json:

@@ -41,7 +41,14 @@ _PAGE, _NB, _P = 16, 4, 16
 
 @dataclasses.dataclass
 class EntryPoint:
-    """One lintable entry point; ``jaxpr`` traces lazily and caches."""
+    """One lintable entry point; ``jaxpr`` traces lazily and caches.
+
+    ``tokens`` is the number of tokens one invocation advances (the
+    denominator of the memory pass's ``bytes_per_token``);
+    ``kv_pool_bytes`` / ``kv_pool_bytes_fp32`` carry the paged KV pool
+    footprint at the traced dtype and its fp32 equivalent, so the
+    ``kv-page-ratio`` rule can enforce the int8 reduction
+    dtype-normalized (smoke configs trace bf16 pools)."""
 
     name: str  # "model:kind:variant"
     model: str
@@ -49,6 +56,10 @@ class EntryPoint:
     variant: str
     _make: Callable[[], jax.core.ClosedJaxpr]
     _jaxpr: jax.core.ClosedJaxpr | None = None
+    tokens: int = 1
+    kv_pool_bytes: int | None = None
+    kv_pool_bytes_fp32: int | None = None
+    _memory: object = None  # MemoryStats cache (see analysis.memory)
 
     @property
     def jaxpr(self) -> jax.core.ClosedJaxpr:
@@ -80,6 +91,15 @@ def _pool_sds(cfg, kv_dtype):
     return pools
 
 
+def _pool_bytes(cfg, kv_dtype) -> int:
+    """Total paged KV pool footprint at the trace shapes (k + v pools,
+    plus per-row fp32 scales for int8)."""
+    rows = cfg.n_layers * (_P + 1) * _PAGE
+    data = 2 * rows * cfg.n_kv_heads * cfg.head_dim * jnp.dtype(kv_dtype).itemsize
+    scales = 2 * rows * 4 if jnp.dtype(kv_dtype) == jnp.int8 else 0
+    return data + scales
+
+
 def _stacked_cache_sds(model, n: int):
     shapes = model.cache_shapes(1, _MAX_LEN)
     return jax.tree_util.tree_map(
@@ -95,9 +115,12 @@ def _model_entries(name: str) -> list[EntryPoint]:
         return []
     entries: list[EntryPoint] = []
 
-    def add(kind: str, variant: str, make):
+    def add(kind: str, variant: str, make, tokens: int = 1, **meta):
         entries.append(
-            EntryPoint(f"{name}:{kind}:{variant}", name, kind, variant, make)
+            EntryPoint(
+                f"{name}:{kind}:{variant}", name, kind, variant, make,
+                tokens=tokens, **meta,
+            )
         )
 
     def dense_model():
@@ -118,8 +141,8 @@ def _model_entries(name: str) -> list[EntryPoint]:
         caches = _stacked_cache_sds(model, _N)
         return jax.make_jaxpr(model.decode_batch)(params, tok, caches)
 
-    add("prefill_batch", "dense", make_prefill_batch)
-    add("decode_batch", "dense", make_decode_batch)
+    add("prefill_batch", "dense", make_prefill_batch, tokens=_N * _S)
+    add("decode_batch", "dense", make_decode_batch, tokens=_N)
     if not supports_paged(cfg):
         return entries
 
@@ -134,7 +157,8 @@ def _model_entries(name: str) -> list[EntryPoint]:
             params, chunk, caches, offs, valids
         )
 
-    add("prefill_chunk_batch", "dense", make_prefill_chunk_batch)
+    add("prefill_chunk_batch", "dense", make_prefill_chunk_batch,
+        tokens=_N * _C)
 
     for impl in ("xla", "pallas"):
         kv_dtypes = [cfg.dtype] if impl == "xla" else [cfg.dtype, "int8"]
@@ -165,8 +189,14 @@ def _model_entries(name: str) -> list[EntryPoint]:
                     params, chunk, pools, offs, valids, bt
                 )
 
-            add("decode_step_paged", variant, make_decode_paged)
-            add("prefill_chunk_paged", variant, make_chunk_paged)
+            pool_meta = dict(
+                kv_pool_bytes=_pool_bytes(cfg_v, kv_dtype),
+                kv_pool_bytes_fp32=_pool_bytes(cfg_v, jnp.float32),
+            )
+            add("decode_step_paged", variant, make_decode_paged,
+                tokens=_W, **pool_meta)
+            add("prefill_chunk_paged", variant, make_chunk_paged,
+                tokens=_W * _C, **pool_meta)
     return entries
 
 
@@ -191,7 +221,7 @@ def _kernel_entries() -> list[EntryPoint]:
 
         entries.append(
             EntryPoint(f"kernel:{kernel_name}:pallas", "kernel", kernel_name,
-                       "pallas", make)
+                       "pallas", make, tokens=B * C if prefill else B)
         )
     return entries
 

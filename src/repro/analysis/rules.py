@@ -190,3 +190,88 @@ def dtype_promotion(entry, budgets: dict) -> list[Finding]:
             )
         ]
     return []
+
+
+# ---------------------------------------------------------------------------
+# memory rules: bytes-per-token / peak-live-bytes / kv-page-ratio
+# ---------------------------------------------------------------------------
+# (memory.py imports Finding from here, so these import it lazily.)
+
+@register_rule(
+    "bytes-per-token",
+    "static per-token memory traffic must match the measured-exact value "
+    "in memory_budgets (regenerate with `cli --update-budgets`)",
+)
+def bytes_per_token(entry, budgets: dict) -> list[Finding]:
+    from .memory import entry_memory
+
+    limits = resolve_budget(budgets.get("memory_budgets", {}), entry.name)
+    if "bytes_per_token" not in limits:
+        return []
+    budget = int(limits["bytes_per_token"])
+    measured = entry_memory(entry).bytes_per_token
+    if measured != budget:
+        return [
+            Finding(
+                "bytes-per-token",
+                entry.name,
+                "static bytes/token drifted from the committed budget — "
+                "a memory-traffic regression (or run --update-budgets "
+                "if intentional)",
+                measured=measured,
+                budget=budget,
+            )
+        ]
+    return []
+
+
+@register_rule(
+    "peak-live-bytes",
+    "liveness-based peak resident bytes must match the measured-exact "
+    "value in memory_budgets",
+)
+def peak_live(entry, budgets: dict) -> list[Finding]:
+    from .memory import entry_memory
+
+    limits = resolve_budget(budgets.get("memory_budgets", {}), entry.name)
+    if "peak_live_bytes" not in limits:
+        return []
+    budget = int(limits["peak_live_bytes"])
+    measured = entry_memory(entry).peak_live_bytes
+    if measured != budget:
+        return [
+            Finding(
+                "peak-live-bytes",
+                entry.name,
+                "peak live bytes drifted from the committed budget",
+                measured=measured,
+                budget=budget,
+            )
+        ]
+    return []
+
+
+@register_rule(
+    "kv-page-ratio",
+    "int8 paged entries must shrink the KV pool ~4x vs the fp32-equivalent "
+    "pool (dtype-normalized; per-row scales eat a little of the 4x)",
+)
+def kv_page_ratio(entry, budgets: dict) -> list[Finding]:
+    limits = resolve_budget(budgets.get("kv_page_ratio", {}), entry.name)
+    if not limits or not entry.kv_pool_bytes or not entry.kv_pool_bytes_fp32:
+        return []
+    ratio = entry.kv_pool_bytes_fp32 / entry.kv_pool_bytes
+    lo = float(limits.get("min_ratio", 0.0))
+    hi = float(limits.get("max_ratio", float("inf")))
+    if not (lo <= ratio <= hi):
+        return [
+            Finding(
+                "kv-page-ratio",
+                entry.name,
+                f"fp32/actual KV pool byte ratio {ratio:.2f} outside "
+                f"[{lo}, {hi}] — the int8 page reduction regressed",
+                measured=entry.kv_pool_bytes,
+                budget=entry.kv_pool_bytes_fp32,
+            )
+        ]
+    return []

@@ -27,6 +27,7 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
+from ..analysis.memory import memory_report  # noqa: E402
 from ..configs import ARCH_NAMES, SHAPES, cells_for, get_config  # noqa: E402
 from ..distributed.sharding import (  # noqa: E402
     DECODE_RULES,
@@ -219,7 +220,6 @@ def lower_cell(
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
 
-    mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
     hlo = compiled.as_text()
     if hlo_path:
@@ -236,12 +236,9 @@ def lower_cell(
         "lower_s": round(t_lower, 1),
         "compile_s": round(t_compile, 1),
         "param_count": count_params(template),
-        "memory_analysis": {
-            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
-            "output_bytes": getattr(mem, "output_size_in_bytes", None),
-            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
-            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
-        },
+        # Shared byte accounting with the analysis donation gate — one
+        # implementation (repro.analysis.memory.memory_report).
+        "memory_analysis": memory_report(compiled),
         # XLA cost_analysis (loop bodies counted ONCE — kept for reference;
         # the roofline uses the trip-scaled HLO walker, see roofline/analysis.py)
         "xla_cost_analysis": {

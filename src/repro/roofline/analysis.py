@@ -40,6 +40,8 @@ __all__ = [
     "callees",
     "parse_computations",
     "roofline_terms",
+    "static_memory_seconds",
+    "static_roofline_terms",
     "top_contributors",
     "trip_count",
 ]
@@ -464,6 +466,26 @@ def roofline_terms(hlo_text: str, chips: int) -> tuple[RooflineTerms, HloCost]:
         chips=chips,
     )
     return terms, cost
+
+
+def static_memory_seconds(required_bytes: float, chips: int = 1) -> float:
+    """Attainable-bandwidth floor on step time from *statically* required
+    bytes — the jaxpr-level memory pass (``repro.analysis.memory``) feeds
+    its per-entry transfer bytes through here, so the roofline's memory
+    term is available before anything compiles, not just from
+    post-optimization HLO."""
+    return required_bytes / (chips * hw.HBM_BW)
+
+
+def static_roofline_terms(required_bytes: float, chips: int = 1) -> RooflineTerms:
+    """A memory-only :class:`RooflineTerms` from static required bytes
+    (FLOPs/collectives unknown before compilation → zero)."""
+    return RooflineTerms(
+        flops=0.0,
+        hbm_bytes=float(required_bytes),
+        collective_bytes=0.0,
+        chips=chips,
+    )
 
 
 def top_contributors(

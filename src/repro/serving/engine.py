@@ -70,6 +70,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import Counter
+from functools import partial
 from typing import Any
 
 import jax
@@ -224,7 +225,7 @@ class _DenseExec:
         self.model_g = model_g
         max_len = server.max_len
 
-        @jax.jit
+        @partial(jax.jit, donate_argnums=(2,))
         def prefill_into(params, batch, cache, slot_idx):
             # batch leaves: [N, 1, S(, D)] — N joining requests, same S.
             leaf = jax.tree_util.tree_leaves(batch)[0]
@@ -235,7 +236,7 @@ class _DenseExec:
             )
             return out, cache
 
-        @jax.jit
+        @partial(jax.jit, donate_argnums=(2,))
         def decode_masked(params, inp, cache, mask):
             # inp: [W, 1, 1(, D)] over the full slot width W = max_batch;
             # mask selects participating slots — the others' caches are
@@ -256,7 +257,7 @@ class _DenseExec:
         self.chunk_masked = None
         if server.prefill_chunk is not None:
 
-            @jax.jit
+            @partial(jax.jit, donate_argnums=(2,))
             def chunk_masked(params, inp, cache, offs, valids, mask):
                 # inp leaves: [W, 1, C(, D)] — one fixed chunk width for
                 # every prompt length in the workload.
@@ -403,7 +404,7 @@ class _PagedExec:
         self.model_g = model_g
         ps = server.page_size
 
-        @jax.jit
+        @partial(jax.jit, donate_argnums=(2,))
         def prefill_pages(params, batch, pools, page_ids):
             # batch leaves: [N, 1, S(, D)]; page_ids: [N, NBs] with
             # NBs * ps >= S. The transient dense cache is per-call only.
@@ -433,12 +434,12 @@ class _PagedExec:
             )
             return out, new
 
-        @jax.jit
+        @partial(jax.jit, donate_argnums=(2,))
         def decode_fn(params, inp, pools, lens, bt):
             _count_trace("decode_paged", g, lens.shape[0])
             return model_g.decode_paged(params, inp, pools, lens, bt)
 
-        @jax.jit
+        @partial(jax.jit, donate_argnums=(2,))
         def prefill_whole_quant(params, inp, pools, offs, valids, bt):
             # int8 pools only: whole-prompt prefill runs as ONE
             # whole-length chunk, so its logits come from the same
@@ -457,7 +458,7 @@ class _PagedExec:
         self.chunk_pages = None
         if server.prefill_chunk is not None:
 
-            @jax.jit
+            @partial(jax.jit, donate_argnums=(2,))
             def chunk_pages(params, inp, pools, offs, valids, bt):
                 # inp: [W, C(, D)] — one fixed chunk width; each lane's
                 # K/V scatter into its reserved pages incrementally.
@@ -484,9 +485,10 @@ class _PagedExec:
             "v": jnp.zeros(shape, s.kv_dtype),
         }
         if s.kv_dtype == jnp.int8:
-            scales = jnp.ones(shape[:3], jnp.float32)
-            pools["k_scale"] = scales
-            pools["v_scale"] = scales
+            # Distinct buffers: the dispatches donate the pool tree, and
+            # XLA rejects donating one buffer at two argument positions.
+            pools["k_scale"] = jnp.ones(shape[:3], jnp.float32)
+            pools["v_scale"] = jnp.ones(shape[:3], jnp.float32)
         return pools
 
     # -- dispatches ------------------------------------------------------

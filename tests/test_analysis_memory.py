@@ -1,0 +1,346 @@
+"""Static memory-flow pass tests: byte cost model, liveness peaks,
+budget drift, and the KV donation lint.
+
+The acceptance criteria live here: the budgets-drift test pins the
+committed ``memory_budgets`` to ``--update-budgets`` output, parity
+tests tie static boundary bytes to ``compiled.memory_analysis()`` on
+CPU, int8 paged entries must show the ~4x dtype-normalized pool
+reduction, and an injected *undonated* engine dispatch must fail the
+``donation`` rule with a named finding."""
+
+import copy
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import (
+    analyze_dispatch,
+    aval_bytes,
+    build_entry_points,
+    entry_memory,
+    io_bytes,
+    load_budgets,
+    memory_report,
+    peak_live_bytes,
+    run_static_rules,
+    transfer_bytes,
+    update_memory_budgets,
+    while_trip_count,
+)
+from repro.analysis.cli import main as cli_main
+from repro.analysis.memory import engine_dispatches
+
+_F32 = jnp.float32
+
+
+def _jx(fn, *args):
+    return jax.make_jaxpr(fn)(*args)
+
+
+def _sds(shape, dtype=_F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+class TestByteModel:
+    def test_aval_bytes(self):
+        j = _jx(lambda x: x + 1.0, _sds((4, 8)))
+        assert aval_bytes(j.jaxpr.invars[0].aval) == 4 * 8 * 4
+
+    def test_elementwise_bytes(self):
+        # y = x + x: one add, reads x twice, writes y once.
+        j = _jx(lambda x: x + x, _sds((16,)))
+        assert transfer_bytes(j) == 3 * 16 * 4
+
+    def test_scan_body_trip_weighted(self):
+        def f(c):
+            return jax.lax.scan(lambda c, _: (c * 2.0, ()), c, None, length=5)[0]
+
+        n = 16 * 4  # carry bytes
+        j = _jx(f, _sds((16,)))
+        # body: mul reads carry + writes carry (the 2.0 is a literal)
+        assert transfer_bytes(j) == 5 * 2 * n
+
+    def test_while_trip_from_cond_literal(self):
+        def f(x):
+            return jax.lax.while_loop(
+                lambda s: s[0] < 7, lambda s: (s[0] + 1, s[1] * 2.0), (0, x)
+            )[1]
+
+        j = _jx(f, _sds((16,)))
+        (weqn,) = [e for e in j.jaxpr.eqns if e.primitive.name == "while"]
+        assert while_trip_count(weqn) == 7
+        assert transfer_bytes(j) > 7 * 16 * 4  # body runs 7x
+
+    def test_gather_charges_rows_not_table(self):
+        table = _sds((1000, 64))
+        idx = jax.ShapeDtypeStruct((4,), jnp.int32)
+        j = _jx(lambda t, i: t[i], table, idx)
+        # Rows actually touched (2x: read + write) + indices — never the
+        # 256KB table.
+        assert transfer_bytes(j) < 3 * 4 * 64 * 4 + 2 * 4 * 4
+
+    def test_dynamic_update_slice_in_place(self):
+        big = _sds((1024, 64))
+        small = _sds((1, 64))
+        j = _jx(
+            lambda b, s: jax.lax.dynamic_update_slice(b, s, (3, 0)), big, small
+        )
+        assert transfer_bytes(j) < 2 * (64 * 4) + 64  # ~2x the slice
+        assert transfer_bytes(j) < aval_bytes(j.jaxpr.invars[0].aval)
+
+    def test_pallas_kernel_dma_granularity(self):
+        """The standalone paged kernel entry charges grid x block bytes,
+        far below reading whole pools per grid cell."""
+        entries = {e.name: e for e in build_entry_points([])}
+        e = entries["kernel:paged_decode_attention:pallas"]
+        stats = entry_memory(e)
+        ins, outs = io_bytes(e.jaxpr)
+        # DMA total stays within a small multiple of the boundary bytes
+        # (each pool page is visited ~once), nowhere near grid x pool.
+        assert stats.transfer_bytes < 3 * (ins + outs)
+
+
+class TestLiveness:
+    def test_chain_releases_dead_values(self):
+        # b = a+a; c = b*b; d = c-1 — at most 2 arrays live at once.
+        n = 1024 * 4
+        j = _jx(lambda a: (a + a) * (a + a) - 1.0, _sds((1024,)))
+        assert peak_live_bytes(j) <= 3 * n
+
+    def test_outputs_stay_live(self):
+        j = _jx(lambda a: (a + 1.0, a * 2.0, a - 3.0), _sds((256,)))
+        assert peak_live_bytes(j) == 4 * 256 * 4  # input + all 3 outputs
+
+    def test_donated_input_excluded(self):
+        j = _jx(lambda a: a + 1.0, _sds((4096,)))
+        full = peak_live_bytes(j)
+        donated = peak_live_bytes(j, donated=(0,))
+        assert donated == full - 4096 * 4
+
+    def test_scan_body_internal_peak_counted(self):
+        # The body allocates a big temporary; the scan eqn must surface it.
+        def f(c):
+            def body(c, _):
+                t = jnp.outer(c, c)  # (64, 64) temp
+                return c + t.sum(axis=1), ()
+
+            return jax.lax.scan(body, c, None, length=3)[0]
+
+        j = _jx(f, _sds((64,)))
+        assert peak_live_bytes(j) >= 64 * 64 * 4
+
+    def test_while_body_internal_peak_counted(self):
+        def f(x):
+            def body(s):
+                i, v = s
+                t = jnp.outer(v, v)
+                return i + 1, v + t.sum(axis=1)
+
+            return jax.lax.while_loop(lambda s: s[0] < 4, body, (0, x))[1]
+
+        j = _jx(f, _sds((64,)))
+        assert peak_live_bytes(j) >= 64 * 64 * 4
+
+
+class TestEntryStats:
+    @pytest.fixture(scope="class")
+    def entries(self):
+        return {e.name: e for e in build_entry_points(["stablelm-1.6b"])}
+
+    def test_stats_for_every_entry(self, entries):
+        for e in entries.values():
+            s = entry_memory(e)
+            assert s.transfer_bytes > 0
+            assert s.bytes_per_token > 0
+            assert s.peak_live_bytes > 0
+            assert s.roofline_memory_s > 0
+
+    def test_bytes_per_token_normalization(self, entries):
+        e = entries["stablelm-1.6b:decode_step_paged:pallas"]
+        s = entry_memory(e)
+        assert s.tokens_per_call == 4
+        assert s.bytes_per_token == -(-s.transfer_bytes // 4)
+
+    def test_pallas_beats_xla_gather_fallback(self, entries):
+        """The kernel path moves fewer static bytes than the XLA gather
+        fallback — the reason the kernels exist, now a checked number."""
+        pallas = entry_memory(entries["stablelm-1.6b:decode_step_paged:pallas"])
+        xla = entry_memory(entries["stablelm-1.6b:decode_step_paged:xla"])
+        assert pallas.bytes_per_token < xla.bytes_per_token
+
+    def test_dense_decode_parity_with_xla(self, entries):
+        """Static boundary bytes match compiled.memory_analysis() on CPU
+        (XLA pads scalars; allow 1%)."""
+        from repro.analysis.entry_points import _N, _sds as sds, _stacked_cache_sds
+        from repro.configs import get_smoke_config
+        from repro.models import build_model
+        from repro.models.common import abstract_params
+
+        cfg = get_smoke_config("stablelm-1.6b")
+        model = build_model(cfg)
+        params = abstract_params(model.template, cfg.param_dtype)
+        tok = sds((_N, 1, 1), jnp.int32)
+        caches = _stacked_cache_sds(model, _N)
+        compiled = jax.jit(model.decode_batch).lower(params, tok, caches).compile()
+        rep = memory_report(compiled)
+        ins, outs = io_bytes(entries["stablelm-1.6b:decode_batch:dense"].jaxpr)
+        assert ins == pytest.approx(rep["argument_bytes"], rel=0.01)
+        assert outs == pytest.approx(rep["output_bytes"], rel=0.01)
+
+    def test_paged_decode_parity_with_xla(self, entries):
+        import dataclasses
+
+        from repro.analysis.entry_points import _NB, _W, _pool_sds, _sds as sds
+        from repro.configs import get_smoke_config
+        from repro.models import build_model
+        from repro.models.common import abstract_params
+
+        cfg = dataclasses.replace(
+            get_smoke_config("stablelm-1.6b"), attn_impl="pallas"
+        )
+        model = build_model(cfg)
+        params = abstract_params(model.template, cfg.param_dtype)
+        tok = sds((_W, 1), jnp.int32)
+        pools = _pool_sds(cfg, cfg.dtype)
+        lens = sds((_W,), jnp.int32)
+        bt = sds((_W, _NB), jnp.int32)
+        compiled = (
+            jax.jit(model.decode_paged)
+            .lower(params, tok, pools, lens, bt)
+            .compile()
+        )
+        rep = memory_report(compiled)
+        ins, outs = io_bytes(
+            entries["stablelm-1.6b:decode_step_paged:pallas"].jaxpr
+        )
+        assert ins == pytest.approx(rep["argument_bytes"], rel=0.01)
+        assert outs == pytest.approx(rep["output_bytes"], rel=0.01)
+
+
+class TestKvPageRatio:
+    def test_int8_pool_is_4x_smaller_fp32_normalized(self):
+        """int8 paged entries carry ~4x less KV pool than the fp32
+        equivalent (per-row scales eat a sliver of the 4x)."""
+        entries = build_entry_points(["stablelm-1.6b"])
+        int8 = [e for e in entries if e.variant == "pallas-int8"]
+        assert int8
+        for e in int8:
+            ratio = e.kv_pool_bytes_fp32 / e.kv_pool_bytes
+            assert 3.0 <= ratio <= 4.0
+
+    def test_ratio_rule_fires_on_regression(self):
+        entries = build_entry_points(["stablelm-1.6b"])
+        e = next(e for e in entries if e.variant == "pallas-int8")
+        e.kv_pool_bytes = e.kv_pool_bytes_fp32  # int8 reduction "lost"
+        budgets = load_budgets(None)
+        findings = run_static_rules([e], budgets, ["kv-page-ratio"])
+        assert findings and findings[0].rule == "kv-page-ratio"
+        assert findings[0].entry_point == e.name
+
+
+class TestBudgetDrift:
+    def test_committed_memory_budgets_match_regeneration(self):
+        """--update-budgets over the full matrix must be a no-op against
+        the committed budgets.json — stale budgets fail fast."""
+        budgets = load_budgets(None)
+        committed = budgets.get("memory_budgets", {})
+        regenerated = update_memory_budgets(copy.deepcopy(budgets),
+                                            build_entry_points())
+        assert committed == regenerated["memory_budgets"]
+
+    def test_memory_rules_green_on_committed_budgets(self):
+        entries = build_entry_points(["stablelm-1.6b"])
+        budgets = load_budgets(None)
+        findings = run_static_rules(
+            entries, budgets, ["bytes-per-token", "peak-live-bytes", "kv-page-ratio"]
+        )
+        assert findings == []
+
+    def test_bytes_per_token_rule_fires_on_drift(self, tmp_path):
+        entries = build_entry_points(["stablelm-1.6b"])
+        budgets = copy.deepcopy(load_budgets(None))
+        name = "stablelm-1.6b:decode_step_paged:pallas"
+        budgets["memory_budgets"][name]["bytes_per_token"] -= 1
+        findings = run_static_rules(entries, budgets, ["bytes-per-token"])
+        assert [f.entry_point for f in findings] == [name]
+        assert findings[0].rule == "bytes-per-token"
+
+    def test_update_budgets_cli_roundtrip(self, tmp_path):
+        """`cli --update-budgets --budgets tmp` rewrites only the
+        memory_budgets section, and --check is green against it."""
+        budgets = copy.deepcopy(load_budgets(None))
+        budgets["memory_budgets"] = {}
+        path = tmp_path / "budgets.json"
+        path.write_text(json.dumps(budgets))
+        assert cli_main(["--update-budgets", "--budgets", str(path)]) == 0
+        rewritten = json.loads(path.read_text())
+        assert rewritten["memory_budgets"] == load_budgets(None)["memory_budgets"]
+
+
+class TestCliMemorySection:
+    def test_report_has_memory_for_every_entry(self, tmp_path):
+        out = tmp_path / "report.json"
+        rc = cli_main([
+            "--check", "--static-only", "--models", "stablelm-1.6b",
+            "--json", str(out),
+        ])
+        assert rc == 0
+        report = json.loads(out.read_text())
+        assert set(report["memory"]) == set(report["entry_points_checked"])
+        for stats in report["memory"].values():
+            assert stats["bytes_per_token"] > 0
+            assert stats["peak_live_bytes"] > 0
+
+
+@pytest.mark.slow
+class TestDonationLint:
+    def test_engine_dispatches_donate(self):
+        """Every real engine dispatch (dense + paged) donates its
+        cache/pool argument, and the compiler honors it."""
+        for paged in (False, True):
+            for name, fn, args in engine_dispatches(paged):
+                report, findings = analyze_dispatch(
+                    name, fn, args, min_bytes=16384
+                )
+                assert findings == [], [str(f) for f in findings]
+                assert report.large_rebuilt >= 1
+                assert report.donated == report.large_rebuilt
+                assert report.aliased_bytes and report.aliased_bytes > 0
+
+    def test_undonated_injection_fails_by_name(self):
+        """An undonated variant of the real decode dispatch must fail
+        the donation rule with a named finding."""
+        name, fn, args = engine_dispatches(True)[0]
+        undonated = jax.jit(lambda p, t, c, l, b: fn(p, t, c, l, b))
+        report, findings = analyze_dispatch(
+            "engine:paged:decode-undonated", undonated, args, min_bytes=16384
+        )
+        assert findings, "undonated dispatch must produce a finding"
+        assert all(f.rule == "donation" for f in findings)
+        assert findings[0].entry_point == "engine:paged:decode-undonated"
+        assert report.donated == 0
+        assert report.large_rebuilt >= 1
+
+    def test_donation_executes_and_frees(self):
+        """Donated decode actually runs, stays correct, and deletes the
+        donated pool buffers (the per-step cache copy is gone)."""
+        import numpy as np
+
+        from repro.analysis.recompile import _smoke_server
+
+        cfg, server = _smoke_server(paged=True)
+        ex = server._exec[0]
+        _, params = server.stages[0]
+        cache = server._caches[(0, 0)]
+        W = server.max_batch
+        nb = -(-server.max_len // server.page_size)
+        tok = jnp.zeros((W, 1), jnp.int32)
+        lens = jnp.ones((W,), jnp.int32)
+        bt = jnp.zeros((W, nb), jnp.int32)
+        old_k = cache["k"]
+        out, new_cache = ex.decode_fn(params, tok, cache, lens, bt)
+        np.asarray(out)  # force completion
+        assert new_cache["k"].shape == old_k.shape
+        assert old_k.is_deleted()
