@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   fig3   — downtime fraction vs energy/job arrivals (paper Fig. 3)
   fig4   — throughput / dropped jobs (paper Fig. 4)
   serve  — engine integration: scheduler driving real decode + failover
+  async  — async vs sync engine: dispatch gaps + tokens/s (BENCH_async.json)
   paged  — paged vs dense KV cache: capacity + throughput (BENCH_paged.json)
   chunked — chunked vs whole-prompt prefill under mixed traffic
             (BENCH_chunked.json)
@@ -77,6 +78,7 @@ def main() -> None:
         return
 
     from . import (
+        async_bench,
         chunked_bench,
         fig2a,
         fig2b,
@@ -97,6 +99,7 @@ def main() -> None:
         fig3,
         fig4,
         serve_bench,
+        async_bench,
         paged_bench,
         chunked_bench,
         quant_kv_bench,

@@ -74,6 +74,7 @@ def batch_sweep(
     warmup_slots: int = 6,
     smoke: bool = False,
     prefill_chunk: int | None = None,
+    async_depth: int = 2,
 ) -> tuple[list[str], dict]:
     """Continuous-batching throughput: the same n_requests × n_tokens
     workload drained through servers of increasing ``max_batch``. One
@@ -94,6 +95,7 @@ def batch_sweep(
             max_len=128,
             max_batch=mb,
             prefill_chunk=prefill_chunk,
+            async_depth=async_depth,
             seed=0,
         )
         reqs = [
@@ -143,6 +145,7 @@ def batch_sweep(
         "n_tokens": n_tokens,
         "prompt_len": prompt_len,
         "prefill_chunk": prefill_chunk,
+        "async_depth": async_depth,
         "smoke": smoke,
         "batch": report,
         f"speedup_{hi}_vs_{lo}": round(speedup, 2),
@@ -159,7 +162,11 @@ def batch_sweep(
     return rows, report_full
 
 
-def run(smoke: bool = False, prefill_chunk: int | None = None) -> list[str]:
+def run(
+    smoke: bool = False,
+    prefill_chunk: int | None = None,
+    async_depth: int = 2,
+) -> list[str]:
     rows = []
     n_slots = 20 if smoke else 60
     policies = ("uniform", "adaptive")
@@ -200,10 +207,12 @@ def run(smoke: bool = False, prefill_chunk: int | None = None) -> list[str]:
     if smoke:
         batch_rows, _ = batch_sweep(
             (1, 4, 16), n_requests=8, n_tokens=8, smoke=True,
-            prefill_chunk=prefill_chunk,
+            prefill_chunk=prefill_chunk, async_depth=async_depth,
         )
     else:
-        batch_rows, _ = batch_sweep((1, 4, 16), prefill_chunk=prefill_chunk)
+        batch_rows, _ = batch_sweep(
+            (1, 4, 16), prefill_chunk=prefill_chunk, async_depth=async_depth,
+        )
     rows.extend(batch_rows)
     return rows
 
@@ -219,8 +228,17 @@ def main() -> None:
         "--prefill-chunk", type=int, default=None,
         help="run the batch sweep with chunked prefill (fixed N-token chunks)",
     )
+    ap.add_argument(
+        "--async-depth", type=int, default=2,
+        help="in-flight calls per replica in the batch sweep "
+             "(0 = legacy synchronous engine)",
+    )
     args = ap.parse_args()
-    for row in run(smoke=args.smoke, prefill_chunk=args.prefill_chunk):
+    for row in run(
+        smoke=args.smoke,
+        prefill_chunk=args.prefill_chunk,
+        async_depth=args.async_depth,
+    ):
         print(row, flush=True)
 
 

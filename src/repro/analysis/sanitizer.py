@@ -20,7 +20,12 @@ device compute — exactly what blocks the async-engine refactor
 The engine calls :func:`mark_engine_step` once per
 ``PipelineServer.step`` so counts bucket per replica-step and tests
 can assert "<= K syncs per step" — the measurable precondition for
-the async engine core.
+the async engine core. With the async engine it additionally calls
+:func:`mark_engine_phase` around the producer ("dispatch") and
+consumer ("commit") halves of the step, so sanctioned syncs bucket by
+*where* in the step they happened: the async contract is zero
+sanctioned syncs inside the dispatch phase — readbacks drain only at
+the commit boundary (``sanctioned_by_phase``).
 
 Caveat: on the CPU backend a raw ``np.asarray(device_array)`` goes
 through the C-level buffer protocol, which neither the transfer guard
@@ -44,6 +49,7 @@ __all__ = [
     "TransferSanitizer",
     "active_sanitizer",
     "host_readback",
+    "mark_engine_phase",
     "mark_engine_step",
 ]
 
@@ -68,6 +74,7 @@ def host_readback(x) -> np.ndarray:
     if s is None:
         return np.asarray(x)
     s._step_sanctioned += 1
+    s.sanctioned_by_phase[s.phase] = s.sanctioned_by_phase.get(s.phase, 0) + 1
     _IN_SANCTIONED = True
     try:
         with jax.transfer_guard_device_to_host("allow"):
@@ -80,6 +87,13 @@ def mark_engine_step() -> None:
     """Close the current replica-step's sync bucket (engine hook)."""
     if _ACTIVE is not None:
         _ACTIVE.mark_step()
+
+
+def mark_engine_phase(phase: str) -> None:
+    """Tag subsequent syncs with the engine step phase ("dispatch" /
+    "commit" / "other") — engine hook, no-op without a sanitizer."""
+    if _ACTIVE is not None:
+        _ACTIVE.phase = phase
 
 
 def _array_impl_type():
@@ -132,6 +146,13 @@ class TransferSanitizer:
         self.per_step: list[int] = []  # sanctioned + unsanctioned per step
         self.sanctioned_total = 0
         self.unsanctioned_total = 0
+        # Engine step phase of each sanctioned sync ("dispatch" /
+        # "commit"; "other" outside the engine's phase markers). The
+        # async engine's contract: sanctioned_by_phase["dispatch"] == 0.
+        self.phase = "other"
+        self.sanctioned_by_phase: dict[str, int] = {
+            "dispatch": 0, "commit": 0, "other": 0,
+        }
         self._step_sanctioned = 0
         self._step_unsanctioned = 0
         self._stack: contextlib.ExitStack | None = None

@@ -52,6 +52,12 @@ def main() -> None:
                          "youngest resident of a live sibling) any failover "
                          "victim parked slotless longer than this many slots; "
                          "<= 0 disables aging")
+    ap.add_argument("--async-depth", type=int, default=2,
+                    help="in-flight calls per (group, replica): the producer "
+                         "dispatches up to this many jitted calls before the "
+                         "committer drains results from the completion queue; "
+                         "1 = commit-time readback without pipelining, "
+                         "0 = legacy synchronous engine (readback at dispatch)")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="chunked prefill: split joining prompts into fixed "
                          "N-token chunks co-scheduled with decode (one compiled "
@@ -83,6 +89,7 @@ def main() -> None:
         kv_dtype=None if args.kv_dtype == "compute" else args.kv_dtype,
         prefill_chunk=args.prefill_chunk,
         max_park_steps=args.max_park_steps if args.max_park_steps > 0 else None,
+        async_depth=args.async_depth,
         seed=args.seed,
     )
     stats = server.run(args.slots, arrival_p=args.arrival_p)

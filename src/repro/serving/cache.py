@@ -285,7 +285,7 @@ class PagedKVCache(KVCacheManager):
 
     def __init__(
         self, n_slots: int, max_len: int, page_size: int, n_pages: int,
-        kv_dtype: str | None = None,
+        kv_dtype: str | None = None, table_buffers: int = 2,
     ):
         super().__init__(n_slots)
         self.max_len = max_len
@@ -298,6 +298,20 @@ class PagedKVCache(KVCacheManager):
         self.nb_max = -(-max_len // page_size)  # block-table row width
         self.pages: dict[int, list[int]] = {}  # rid -> physical pages
         self.block_table = np.full((n_slots, self.nb_max), n_pages, np.int32)
+        # Snapshot ring for the device copies. The working table above
+        # mutates on every alloc/free; each device refresh snapshots it
+        # into the next host buffer so a pending async dispatch that may
+        # still be reading a zero-copied earlier snapshot is never
+        # written through (the engine sizes this to its in-flight ring
+        # depth + 1).
+        if table_buffers < 2:
+            raise ValueError("table_buffers must be >= 2 (double buffering)")
+        self.table_buffers = table_buffers
+        self._snapshots = [
+            np.full((n_slots, self.nb_max), n_pages, np.int32)
+            for _ in range(table_buffers)
+        ]
+        self._snap_idx = 0
         self._bt_dev = None  # device copy, invalidated on row change
 
     # -- capacity --------------------------------------------------------
@@ -366,11 +380,18 @@ class PagedKVCache(KVCacheManager):
         self._bt_dev = None
 
     def device_block_table(self):
-        """Cached device block table; refreshed only on page alloc/free."""
+        """Cached device block table; refreshed only on page alloc/free.
+
+        Each refresh rotates to the next snapshot buffer before copying
+        the working table, so an in-flight dispatch holding the previous
+        device array never sees its backing host buffer mutate."""
         if self._bt_dev is None:
             import jax.numpy as jnp
 
-            self._bt_dev = jnp.asarray(self.block_table)
+            self._snap_idx = (self._snap_idx + 1) % self.table_buffers
+            buf = self._snapshots[self._snap_idx]
+            np.copyto(buf, self.block_table)
+            self._bt_dev = jnp.asarray(buf)
         return self._bt_dev
 
     # -- introspection ---------------------------------------------------
@@ -387,3 +408,23 @@ class PagedKVCache(KVCacheManager):
                 f"pool accounts {self.pool.used_pages} pages but managers "
                 f"hold {len(held)}"
             )
+        # Working block table rows must name exactly the pages their
+        # slot's rid holds (scratch-padded), and the snapshot backing
+        # the live device copy must match the working table — a stale
+        # live snapshot would let a *future* dispatch read freed pages.
+        for slot, rid in enumerate(self.slots):
+            row = self.block_table[slot]
+            pages = self.pages.get(rid, []) if rid is not None else []
+            if list(row[: len(pages)]) != pages or not (
+                row[len(pages):] == self.pool.scratch
+            ).all():
+                raise PageError(
+                    f"block-table row {slot} does not match rid {rid}'s pages"
+                )
+        if self._bt_dev is not None:
+            live = self._snapshots[self._snap_idx]
+            if not np.array_equal(live, self.block_table):
+                raise PageError(
+                    "live device block-table snapshot is stale "
+                    "(working table changed without invalidation)"
+                )

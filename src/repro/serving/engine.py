@@ -63,13 +63,44 @@ XLA fallback alike. KV bytes per token drop 4x (fp32 compute) / 2x
 (bf16), so the same pool admits proportionally more residents
 (``benchmarks/quant_kv_bench.py``; accuracy swept in
 ``tests/test_quant_kv.py``).
+
+Async engine core (``async_depth=K``)
+-------------------------------------
+The step loop is split into a **producer** (scheduler decisions + call
+assembly + jitted dispatch) and a **consumer** (the committer: batched
+argmax readback through ``host_readback``, slot/page release, failover
+re-queue). A dispatch no longer blocks on its own results: each
+``_StageCall`` carries *deferred readbacks* — the device argmax arrays
+plus finalizer closures — and the host sync happens only when the call
+is committed from the per-replica completion queue, never at dispatch.
+Each (group, replica) owns an in-flight ring of up to ``async_depth``
+calls, so a replica dispatches its next call (over members not already
+in flight) while previous ones are still executing; JAX async dispatch
+overlaps the device work with all host-side scheduling in between.
+
+* ``async_depth=0`` — legacy synchronous engine: ring depth 1 and the
+  readback happens eagerly at dispatch (the pre-async behavior, kept as
+  the differential baseline).
+* ``async_depth=1`` — ring depth 1, commit-time readback. Scheduling,
+  token streams and ``ServerStats`` are *identical* to depth 0; only
+  the host no longer stalls inside the dispatch phase.
+* ``async_depth>=2`` — true in-flight pipelining: queued calls charge
+  energy and advance every slot and commit in dispatch order.
+
+Abort-safety contract: a replica death mid-flight discards every ring
+entry *without finalizing its readbacks* — deferred results are
+dropped on the floor, members are re-queued by the scheduler, and no
+request state is ever mutated from a call that did not commit. Token
+streams are therefore bit-for-bit identical across every depth
+(``tests/test_async_engine.py`` proves this differentially under
+admission, chunked prefill, preemption and double failover).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from collections import Counter
+from collections import Counter, deque
 from functools import partial
 from typing import Any
 
@@ -77,7 +108,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..analysis.sanitizer import host_readback, mark_engine_step
+from ..analysis.sanitizer import host_readback, mark_engine_phase, mark_engine_step
 from ..core.power import PowerModePolicy, dynamic_policy
 from ..models.registry import Model
 from .budget import ReplicaBudget
@@ -125,12 +156,27 @@ class _StageCall:
     more prompt tokens consumed, prefill continues next step;
     ``("chunk_done", t|h, n)`` — the chunk that completed the stage's
     prefill.
+
+    Token-valued entries are *deferred*: at dispatch they hold ``None``
+    and ``readbacks`` carries ``(device_array, finalize)`` pairs — the
+    batched argmax outputs still in flight plus the closures that patch
+    the host integers into ``outputs``. The committer drains them
+    through :func:`host_readback` when the call completes; an aborted
+    call (replica death mid-flight) is discarded with its readbacks
+    unfinalized, so a dead dispatch can never mutate request state.
     """
 
     members: list[Request]
     outputs: list[tuple]
+    readbacks: list[tuple]
     pm: int
     slots_left: int
+    t_dispatch: float = 0.0
+    # Stamped the moment the call's device slots complete (dispatch-
+    # observable time) — NOT when the completion queue finally drains
+    # it; TTFT accounting reads these, so a deep ring cannot inflate it.
+    t_ready: float | None = None
+    ready_slot: int | None = None
 
 
 @dataclasses.dataclass
@@ -148,6 +194,7 @@ class ServerStats:
     preempted_jobs: int = 0  # paged: evicted on page exhaustion, requeued
     aged_placements: int = 0  # parked > max_park_steps: force-placed
     peak_active: int = 0  # max concurrently resident requests
+    inflight_peak: int = 0  # max calls in one replica's in-flight ring
     slots: int = 0
     downtime_replica_slots: int = 0  # whole (replica, slot) pairs down
     n_groups: int = 1
@@ -181,37 +228,54 @@ def _group_by_len(jobs) -> dict[int, list]:
     return by_len
 
 
-def _emit_whole_outputs(server, g, grp, out, outputs, mgr, length):
+def _emit_whole_outputs(server, g, grp, out, outputs, mgr, length, readbacks):
     """Shared whole-prefill tail for both backends: record the host
-    length mirror and emit one token (batched argmax, one host sync) or
-    hidden handoff per member of a same-length dispatch group."""
+    length mirror and emit one deferred token readback (batched argmax,
+    one host sync at commit) or hidden handoff per member of a
+    same-length dispatch group."""
     for _, m, _ in grp:
         mgr.lengths[m.slot_ids[g]] = length
     if g == server.G - 1:
-        toks = host_readback(jnp.argmax(out[:, 0, -1], axis=-1))
-        for j, (i, _, _) in enumerate(grp):
-            outputs[i] = ("token", int(toks[j]), 0)
+        idxs = [i for i, _, _ in grp]
+
+        def fin(toks, idxs=idxs):
+            for j, i in enumerate(idxs):
+                outputs[i] = ("token", int(toks[j]), 0)
+
+        readbacks.append((jnp.argmax(out[:, 0, -1], axis=-1), fin))
     else:
         for j, (i, _, _) in enumerate(grp):
             outputs[i] = ("hidden", out[j], 0)
 
 
-def _emit_chunk_outputs(server, g, jobs, outputs, mgr, toks, hidden_at):
+def _emit_chunk_outputs(server, g, jobs, outputs, mgr, argmax, hidden_at, readbacks):
     """Shared chunk-job tail for both backends: advance the host length
     mirror, decide per-lane completion, and emit ``chunk_part`` /
-    ``chunk_done`` results. ``toks`` is the batched [W, C] argmax (last
-    stage only); ``hidden_at(slot, valid)`` slices a lane's [1, valid, D]
+    ``chunk_done`` results. ``argmax`` is the batched [W, C] argmax
+    device array (last stage only — its readback is deferred to
+    commit); ``hidden_at(slot, valid)`` slices a lane's [1, valid, D]
     hidden from the dispatch output (mid stages only)."""
     last = g == server.G - 1
+    finals: list[tuple[int, int, int]] = []
     for i, m, seq, pos, valid in jobs:
         slot = m.slot_ids[g]
         mgr.lengths[slot] = pos + valid
         done = pos + valid == _seq_len(seq)
         if last:
-            value = int(toks[slot, valid - 1]) if done else None
+            if done:
+                finals.append((i, slot, valid))
+            outputs[i] = ("chunk_done" if done else "chunk_part", None, valid)
         else:
             value = hidden_at(slot, valid)
-        outputs[i] = ("chunk_done" if done else "chunk_part", value, valid)
+            outputs[i] = ("chunk_done" if done else "chunk_part", value, valid)
+    if last:
+        # One deferred readback per chunk dispatch (sync-count parity
+        # with the pre-async engine even when no lane completed).
+        def fin(toks, finals=finals):
+            for i, slot, valid in finals:
+                outputs[i] = ("chunk_done", int(toks[slot, valid - 1]), valid)
+
+        readbacks.append((argmax, fin))
 
 
 class _DenseExec:
@@ -286,7 +350,7 @@ class _DenseExec:
         )
 
     # -- dispatches ------------------------------------------------------
-    def run_prefill_whole(self, r, jobs, outputs, mgr: KVCacheManager):
+    def run_prefill_whole(self, r, jobs, outputs, mgr: KVCacheManager, readbacks):
         """jobs: [(out_idx, member, inp [1,S(,D)])], grouped by length."""
         s, g = self.server, self.g
         _, params_g = s.stages[g]
@@ -297,10 +361,10 @@ class _DenseExec:
             slots = jnp.asarray([m.slot_ids[g] for _, m, _ in grp], jnp.int32)
             out, cache = self.prefill_into(params_g, {key: stacked}, cache, slots)
             s.stats.prefill_calls += 1
-            _emit_whole_outputs(s, g, grp, out, outputs, mgr, length)
+            _emit_whole_outputs(s, g, grp, out, outputs, mgr, length, readbacks)
         s._caches[(g, r)] = cache
 
-    def run_chunks(self, r, jobs, outputs, mgr: KVCacheManager):
+    def run_chunks(self, r, jobs, outputs, mgr: KVCacheManager, readbacks):
         """jobs: [(out_idx, member, seq, pos, valid)] — one fixed-shape
         masked dispatch advances every joining prompt by <= C tokens."""
         s, g = self.server, self.g
@@ -341,13 +405,14 @@ class _DenseExec:
         )
         s._caches[(g, r)] = cache
         s.stats.chunk_prefill_calls += 1
-        toks = host_readback(jnp.argmax(out[:, 0], axis=-1)) if last else None
+        argmax = jnp.argmax(out[:, 0], axis=-1) if last else None
         _emit_chunk_outputs(
-            s, g, jobs, outputs, mgr, toks,
+            s, g, jobs, outputs, mgr, argmax,
             lambda slot, valid: out[slot, :, :valid],  # [1, valid, D]
+            readbacks,
         )
 
-    def run_decode(self, r, jobs, outputs, mgr: KVCacheManager):
+    def run_decode(self, r, jobs, outputs, mgr: KVCacheManager, readbacks):
         """jobs: [(out_idx, member)] — one masked dispatch over the full
         static slot width."""
         s, g = self.server, self.g
@@ -385,9 +450,15 @@ class _DenseExec:
         for _, m in jobs:
             mgr.lengths[m.slot_ids[g]] += 1
         if last:
-            toks = host_readback(jnp.argmax(out[:, 0, -1], axis=-1))
-            for i, m in jobs:
-                outputs[i] = ("token", int(toks[m.slot_ids[g]]), 0)
+            # Capture concrete slot ints now: by commit time a member's
+            # slot_ids could be rewritten by a later placement.
+            pairs = [(i, m.slot_ids[g]) for i, m in jobs]
+
+            def fin(toks, pairs=pairs):
+                for i, slot in pairs:
+                    outputs[i] = ("token", int(toks[slot]), 0)
+
+            readbacks.append((jnp.argmax(out[:, 0, -1], axis=-1), fin))
         else:
             for i, m in jobs:
                 outputs[i] = ("hidden", out[m.slot_ids[g]], 0)
@@ -492,12 +563,12 @@ class _PagedExec:
         return pools
 
     # -- dispatches ------------------------------------------------------
-    def run_prefill_whole(self, r, jobs, outputs, mgr: PagedKVCache):
+    def run_prefill_whole(self, r, jobs, outputs, mgr: PagedKVCache, readbacks):
         s, g = self.server, self.g
         _, params_g = s.stages[g]
         cache = s._caches[(g, r)]
         if "k_scale" in cache:
-            return self._run_prefill_whole_quant(r, jobs, outputs, mgr)
+            return self._run_prefill_whole_quant(r, jobs, outputs, mgr, readbacks)
         key = "tokens" if g == 0 else "hidden"
         for length, grp in sorted(_group_by_len(jobs).items()):
             stacked = jnp.stack([inp for _, _, inp in grp])
@@ -509,10 +580,10 @@ class _PagedExec:
                 params_g, {key: stacked}, cache, jnp.asarray(page_ids)
             )
             s.stats.prefill_calls += 1
-            _emit_whole_outputs(s, g, grp, out, outputs, mgr, length)
+            _emit_whole_outputs(s, g, grp, out, outputs, mgr, length, readbacks)
         s._caches[(g, r)] = cache
 
-    def _run_prefill_whole_quant(self, r, jobs, outputs, mgr: PagedKVCache):
+    def _run_prefill_whole_quant(self, r, jobs, outputs, mgr: PagedKVCache, readbacks):
         """int8 pools: one whole-length chunk dispatch per distinct
         prompt length, over ONLY the joining lanes with a compact
         [N, nbs] block table (same work profile as the fp32
@@ -544,15 +615,19 @@ class _PagedExec:
             for _, m, _ in grp:
                 mgr.lengths[m.slot_ids[g]] = length
             if last:
-                toks = host_readback(jnp.argmax(out[:, length - 1], axis=-1))
-                for j, (i, _, _) in enumerate(grp):
-                    outputs[i] = ("token", int(toks[j]), 0)
+                idxs = [i for i, _, _ in grp]
+
+                def fin(toks, idxs=idxs):
+                    for j, i in enumerate(idxs):
+                        outputs[i] = ("token", int(toks[j]), 0)
+
+                readbacks.append((jnp.argmax(out[:, length - 1], axis=-1), fin))
             else:
                 for j, (i, _, _) in enumerate(grp):
                     outputs[i] = ("hidden", out[j, :length][None], 0)
         s._caches[(g, r)] = cache
 
-    def run_chunks(self, r, jobs, outputs, mgr: PagedKVCache):
+    def run_chunks(self, r, jobs, outputs, mgr: PagedKVCache, readbacks):
         s, g = self.server, self.g
         _, params_g = s.stages[g]
         C = s.prefill_chunk
@@ -589,13 +664,14 @@ class _PagedExec:
         )
         s._caches[(g, r)] = cache
         s.stats.chunk_prefill_calls += 1
-        toks = host_readback(jnp.argmax(out, axis=-1)) if last else None
+        argmax = jnp.argmax(out, axis=-1) if last else None
         _emit_chunk_outputs(
-            s, g, jobs, outputs, mgr, toks,
+            s, g, jobs, outputs, mgr, argmax,
             lambda slot, valid: out[slot, :valid][None],  # [1, valid, D]
+            readbacks,
         )
 
-    def run_decode(self, r, jobs, outputs, mgr: PagedKVCache):
+    def run_decode(self, r, jobs, outputs, mgr: PagedKVCache, readbacks):
         """One natively-batched paged dispatch over the slot width.
         Lanes marked -1 write to the scratch page and attend one masked
         position; their outputs are never read. The device block table
@@ -638,9 +714,13 @@ class _PagedExec:
         for _, m in jobs:
             mgr.lengths[m.slot_ids[g]] += 1
         if last:
-            toks = host_readback(jnp.argmax(out[:, 0], axis=-1))
-            for i, m in jobs:
-                outputs[i] = ("token", int(toks[m.slot_ids[g]]), 0)
+            pairs = [(i, m.slot_ids[g]) for i, m in jobs]
+
+            def fin(toks, pairs=pairs):
+                for i, slot in pairs:
+                    outputs[i] = ("token", int(toks[slot]), 0)
+
+            readbacks.append((jnp.argmax(out[:, 0], axis=-1), fin))
         else:
             # Hand-offs stay [1, D] (not dense's [1, 1, D]): the
             # per-member [None] here costs one eagerly-dispatched
@@ -672,6 +752,7 @@ class PipelineServer:
         kv_dtype: str | None = None,
         prefill_chunk: int | None = None,
         max_park_steps: int | None = 32,
+        async_depth: int = 2,
         seed: int = 0,
     ):
         self.cfg = model.cfg
@@ -714,6 +795,11 @@ class PipelineServer:
                     f"{model.cfg.name}: chunked prefill needs uniform full "
                     "attention (see repro.models.transformer.supports_paged)"
                 )
+        if async_depth < 0:
+            raise ValueError("async_depth must be >= 0 (0 = legacy sync)")
+        self.async_depth = async_depth
+        # Ring capacity: depth 0 (legacy sync) still needs one open call.
+        self._depth = max(1, async_depth)
         self.pm_policy = pm_policy or dynamic_policy(100)
         # Independent RNG streams: harvest/arrival draws and routing draws
         # must not be correlated (same-integer seeding would lockstep them).
@@ -740,6 +826,10 @@ class PipelineServer:
                 (g, r): PagedKVCache(
                     max_batch, max_len, page_size, self.max_pages,
                     kv_dtype=str(self.kv_dtype),
+                    # One snapshot buffer per possible in-flight call plus
+                    # the one being built: a block-table refresh never
+                    # touches a buffer a pending dispatch may still read.
+                    table_buffers=self._depth + 1,
                 )
                 for g in range(n_groups)
                 for r in range(n_replicas)
@@ -766,7 +856,18 @@ class PipelineServer:
             for g in range(n_groups)
             for r in range(n_replicas)
         }
-        self._calls: dict[tuple[int, int], _StageCall] = {}
+        # Per-replica in-flight rings (completion queues): producer
+        # appends at dispatch, consumer drains committed heads in order.
+        self._calls: dict[tuple[int, int], deque[_StageCall]] = {
+            (g, r): deque() for g in range(n_groups) for r in range(n_replicas)
+        }
+        # (group, replica, perf_counter) per dispatch — async_bench reads
+        # inter-dispatch gaps from this.
+        self.dispatch_log: list[tuple[int, int, float]] = []
+        self.scheduler.inflight = lambda: [
+            [len(self._calls[(g, r)]) for r in range(self.R)]
+            for g in range(self.G)
+        ]
 
     # ------------------------------------------------------------------
     # Admission
@@ -780,6 +881,7 @@ class PipelineServer:
             prompt=np.asarray(tokens),
             n_tokens=n_tokens,
             t_submit=time.perf_counter(),
+            submit_slot=self.stats.slots,
         )
         self._next_rid += 1
         return self.scheduler.submit(req)
@@ -819,6 +921,7 @@ class PipelineServer:
         mgr = self.managers[(g, r)]
         sched = self.scheduler
         chunk = self.prefill_chunk
+        t_dispatch = time.perf_counter()
 
         # Build each member's work item first (prefill length drives page
         # demand), then secure memory oldest-first; _ensure may preempt
@@ -869,31 +972,72 @@ class PipelineServer:
             else:
                 whole_jobs.append((i, m, item[1]))
 
+        readbacks: list[tuple] = []
         ex = self._exec[g]
         if whole_jobs:
-            ex.run_prefill_whole(r, whole_jobs, outputs, mgr)
+            ex.run_prefill_whole(r, whole_jobs, outputs, mgr, readbacks)
         if chunk_jobs:
-            ex.run_chunks(r, chunk_jobs, outputs, mgr)
+            ex.run_chunks(r, chunk_jobs, outputs, mgr, readbacks)
         if decode_jobs:
-            ex.run_decode(r, decode_jobs, outputs, mgr)
+            ex.run_decode(r, decode_jobs, outputs, mgr, readbacks)
 
         self.stats.stage_executions += len(served)
         for m in served:
             m.in_call = True
         pm = self.budgets[g][r].pm
         kappa = self.pm_policy.mode(pm).kappa
-        return _StageCall(members=served, outputs=outputs, pm=pm, slots_left=kappa)
+        self.dispatch_log.append((g, r, t_dispatch))
+        call = _StageCall(
+            members=served,
+            outputs=outputs,
+            readbacks=readbacks,
+            pm=pm,
+            slots_left=kappa,
+            t_dispatch=t_dispatch,
+        )
+        if self.async_depth == 0:
+            # Legacy synchronous engine: block on the results right here,
+            # inside the dispatch phase (the differential baseline).
+            self._finalize(call)
+        return call
 
     # ------------------------------------------------------------------
     # Commit
     # ------------------------------------------------------------------
-    def _emit_token(self, req: Request, token: int) -> None:
+    def _finalize(self, call: _StageCall) -> None:
+        """Drain the call's deferred readbacks (the only host syncs)."""
+        for dev, fin in call.readbacks:
+            fin(host_readback(dev))
+        call.readbacks = []
+
+    def _commit_call(self, g: int, call: _StageCall) -> None:
+        self._finalize(call)
+        for m, out in zip(call.members, call.outputs):
+            self._commit(m, out, g, call.t_ready, call.ready_slot)
+
+    def _emit_token(
+        self,
+        req: Request,
+        token: int,
+        t_ready: float | None = None,
+        ready_slot: int | None = None,
+    ) -> None:
         req.generated.append(token)
         if req.t_first_token is None:
-            req.t_first_token = time.perf_counter()
+            # Dispatch-observable time: the slot the device work finished,
+            # not the (possibly later) slot the completion queue drained.
+            req.t_first_token = t_ready if t_ready is not None else time.perf_counter()
+            req.slot_first_token = ready_slot
         self.stats.tokens_generated += 1
 
-    def _commit(self, req: Request, out: tuple, g: int) -> None:
+    def _commit(
+        self,
+        req: Request,
+        out: tuple,
+        g: int,
+        t_ready: float | None = None,
+        ready_slot: int | None = None,
+    ) -> None:
         """Apply a completed stage call's result to the request."""
         req.in_call = False
         kind, value, advance = out
@@ -909,7 +1053,7 @@ class PipelineServer:
             req.chunk_seq = None
             req.cache_ready[g] = True
             if g == self.G - 1:
-                self._emit_token(req, value)
+                self._emit_token(req, value, t_ready, ready_slot)
             else:
                 parts = req.chunk_outs + [value]
                 req.hidden = (
@@ -920,7 +1064,7 @@ class PipelineServer:
             return
         req.cache_ready[g] = True
         if kind == "token":
-            self._emit_token(req, value)
+            self._emit_token(req, value, t_ready, ready_slot)
         else:
             req.hidden = value
         self._advance(req)
@@ -939,7 +1083,8 @@ class PipelineServer:
     # Slot loop
     # ------------------------------------------------------------------
     def step(self) -> None:
-        """Advance one slot (the paper's Algorithm 1 outer loop)."""
+        """Advance one slot (the paper's Algorithm 1 outer loop),
+        producer (dispatch) before consumer (commit)."""
         self.stats.slots += 1
         sched = self.scheduler
         # 1) harvest + hysteresis + downtime telemetry (whole replica-slots)
@@ -951,13 +1096,16 @@ class PipelineServer:
                 if not b.available:
                     self.stats.downtime_replica_slots += 1
 
-        # 2) abort calls on dead replicas; reroute their members
-        for (g, r), call in list(self._calls.items()):
-            if not self.budgets[g][r].alive:
-                del self._calls[(g, r)]
-                for m in call.members:
-                    m.in_call = False
-                    sched.reroute_or_drop(m)
+        # 2) abort in-flight rings on dead replicas; reroute their
+        #    members. The ring entries' readbacks are never finalized —
+        #    a dead dispatch's results are dropped, not committed.
+        for (g, r), ring in self._calls.items():
+            if ring and not self.budgets[g][r].alive:
+                for call in ring:
+                    for m in call.members:
+                        m.in_call = False
+                        sched.reroute_or_drop(m)
+                ring.clear()
 
         # 3) re-place parked / dead-replica requests, BEFORE queue
         #    admission (in-flight work must not be starved by fresh
@@ -965,32 +1113,46 @@ class PipelineServer:
         sched.replace_parked()
         sched.admit_pending()
 
-        # 5) start one batched call per idle, energy-ready replica
+        # 5) producer: fill each energy-ready replica's in-flight ring.
+        #    Members already in flight are excluded by select_members
+        #    (in_call), so queued calls cover disjoint request sets.
+        mark_engine_phase("dispatch")
         for g in range(self.G):
             for r in range(self.R):
-                if (g, r) in self._calls:
-                    continue
-                if not sched.can_start(g, r):
-                    continue  # power saving / energy gate: jobs held
-                members = sched.select_members(g, r)
-                if members:
+                ring = self._calls[(g, r)]
+                while len(ring) < self._depth:
+                    if not sched.can_start(g, r):
+                        break  # power saving / energy gate: jobs held
+                    members = sched.select_members(g, r)
+                    if not members:
+                        break
                     call = self._start_call(g, r, members)
-                    if call is not None:  # paged: every member deferred
-                        self._calls[(g, r)] = call
+                    if call is None:  # paged: every member deferred
+                        break
+                    ring.append(call)
+                    self.stats.inflight_peak = max(
+                        self.stats.inflight_peak, len(ring)
+                    )
 
-        # 6) advance calls: charge CE(PM)/kappa per slot (device-level,
-        #    amortized over the batch), commit results on completion
-        for (g, r), call in list(self._calls.items()):
+        # 6) consumer: charge CE(PM)/kappa per slot per in-flight call
+        #    (device-level, amortized over the batch), stamp readiness at
+        #    the slot the device work completes, then drain the
+        #    completion queue head-first in dispatch order.
+        mark_engine_phase("commit")
+        for (g, r), ring in self._calls.items():
             b = self.budgets[g][r]
             if not b.available:
                 continue  # power saving: stage paused (jobs held, Sec. III)
-            mode = self.pm_policy.mode(call.pm)
-            b.charge(mode.ce / mode.kappa)
-            call.slots_left -= 1
-            if call.slots_left <= 0:
-                del self._calls[(g, r)]
-                for m, out in zip(call.members, call.outputs):
-                    self._commit(m, out, g)
+            for call in ring:
+                mode = self.pm_policy.mode(call.pm)
+                b.charge(mode.ce / mode.kappa)
+                call.slots_left -= 1
+                if call.slots_left <= 0 and call.t_ready is None:
+                    call.t_ready = time.perf_counter()
+                    call.ready_slot = self.stats.slots
+            while ring and ring[0].slots_left <= 0:
+                self._commit_call(g, ring.popleft())
+        mark_engine_phase("other")
 
         # 7) close this slot's device->host sync bucket (no-op unless a
         #    repro.analysis TransferSanitizer is active)

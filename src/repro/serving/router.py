@@ -47,6 +47,7 @@ class Router:
         self,
         budgets: list[list[ReplicaBudget]],
         free_slots: list[list[int]] | None = None,
+        inflight: list[list[int]] | None = None,
     ) -> list[np.ndarray]:
         """Per-group routing distributions (Alg. 1 lines 7-9).
 
@@ -54,7 +55,12 @@ class Router:
         the result is a list of per-group vectors. ``free_slots`` (same
         nesting as ``budgets``) reweights each replica by its free batch
         capacity: full replicas are masked out and emptier replicas
-        attract proportionally more new requests.
+        attract proportionally more new requests. ``inflight`` (async
+        engine: per-replica in-flight ring depths) soft-de-weights busy
+        replicas by ``1 / (1 + depth)`` — a deeper completion queue
+        means later commit, so admissions prefer idler siblings. Uniform
+        depths (in particular all-zero, the sync engine) cancel under
+        normalization, keeping depth 0/1 routing identical.
         """
         fn = POLICIES[self.policy]
         out: list[np.ndarray] = []
@@ -67,8 +73,12 @@ class Router:
             avail = np.array([b.available for b in group])
             pm = np.array([b.pm for b in group])
             p = np.asarray(fn(rates, pm, avail), dtype=np.float64)
+            if inflight is not None:
+                depth = np.maximum(np.asarray(inflight[g], dtype=np.float64), 0.0)
+                p = p / (1.0 + depth)
             if free_slots is not None:
                 p = p * np.maximum(np.asarray(free_slots[g], dtype=np.float64), 0.0)
+            if inflight is not None or free_slots is not None:
                 total = p.sum()
                 if total > 0:
                     p = p / total
@@ -85,9 +95,10 @@ class Router:
         self,
         budgets: list[list[ReplicaBudget]],
         free_slots: list[list[int]] | None = None,
+        inflight: list[list[int]] | None = None,
     ) -> list[int]:
         """Designate one replica per group for a new request."""
-        probs = self.probabilities(budgets, free_slots)
+        probs = self.probabilities(budgets, free_slots, inflight)
         return [self._pick(p, g) for g, p in enumerate(probs)]
 
     def reroute(
@@ -95,9 +106,10 @@ class Router:
         budgets: list[list[ReplicaBudget]],
         g: int,
         free_slots: list[list[int]] | None = None,
+        inflight: list[list[int]] | None = None,
     ) -> int:
         """Pick a failover sibling in group ``g`` for an in-flight stage."""
-        return self._pick(self.probabilities(budgets, free_slots)[g], g)
+        return self._pick(self.probabilities(budgets, free_slots, inflight)[g], g)
 
     def on_membership_change(self, rates: np.ndarray | None) -> None:
         """Elastic event: new long-term rates after add/remove of nodes

@@ -74,13 +74,29 @@ class Request:
     dropped: bool = False
     t_submit: float = 0.0  # wall clock at submit (TTFT accounting)
     t_first_token: float | None = None  # wall clock of the first generated token
+    submit_slot: int = 0  # engine slot counter at submit
+    slot_first_token: int | None = None  # slot the first token's call completed
 
     @property
     def ttft(self) -> float | None:
-        """Wall-clock time-to-first-token, once the first token lands."""
+        """Wall-clock time-to-first-token, once the first token lands.
+
+        Stamped at dispatch-observable time — the moment the producing
+        call's device slots complete — not when the async completion
+        queue drains it, so a deep in-flight ring cannot inflate TTFT.
+        """
         if self.t_first_token is None:
             return None
         return self.t_first_token - self.t_submit
+
+    @property
+    def ttft_slots(self) -> int | None:
+        """TTFT in whole engine slots (deterministic, wall-clock-free):
+        slots elapsed from submit until the call that produced the first
+        token completed its device work."""
+        if self.slot_first_token is None:
+            return None
+        return self.slot_first_token - self.submit_slot
 
     def context_len(self) -> int:
         """Current full context: prompt plus every generated token."""
@@ -115,6 +131,10 @@ class StepScheduler:
         self.R = len(budgets[0]) if budgets else 0
         self.active: list[Request] = []
         self.pending: collections.deque[Request] = collections.deque()
+        # Optional supplier of per-(group, replica) in-flight ring depths
+        # (wired by the engine); routing de-weights replicas with deeper
+        # completion queues so admissions spread across the ring.
+        self.inflight = None
 
     # ------------------------------------------------------------------
     # Capacity / gating
@@ -186,7 +206,11 @@ class StepScheduler:
         claims and an under-reserved re-admit cannot immediately preempt
         healthy residents. Decode growth still allocates lazily."""
         try:
-            replicas = self.router.route(self.budgets, free_slots=self.free_counts())
+            replicas = self.router.route(
+                self.budgets,
+                free_slots=self.free_counts(),
+                inflight=self.inflight() if self.inflight is not None else None,
+            )
         except RouteError:
             return False
         ctx = req.context_len()
@@ -272,7 +296,12 @@ class StepScheduler:
             self.drop_resident(req)
             return
         try:
-            new_r = self.router.reroute(self.budgets, g, free_slots=self.free_counts())
+            new_r = self.router.reroute(
+                self.budgets,
+                g,
+                free_slots=self.free_counts(),
+                inflight=self.inflight() if self.inflight is not None else None,
+            )
         except RouteError:
             # Live siblings exist but are momentarily full / power-saving:
             # the request stays parked (slotless) and the re-place is

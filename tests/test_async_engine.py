@@ -1,0 +1,393 @@
+"""Async engine core: cross-engine differential tests.
+
+The headline evidence for the in-flight dispatch refactor: the same
+seeded trace driven through the legacy synchronous engine
+(``async_depth=0``) and the async engine (depth 1, 2, 3) must produce
+bit-for-bit identical token streams — under plain admission, chunked
+prefill, paged preemption, and double failover — because
+
+* greedy argmax is deterministic per request and per-request calls are
+  serialized (a member never joins two in-flight calls at once);
+* preemption and failover are loss-free (prompt + generated re-prefill);
+* an aborted in-flight call is discarded without finalizing its
+  readbacks, so a dead dispatch can never mutate request state.
+
+Also here: the async port of the paged lifecycle fuzzer (per-step
+conservation on the working block table AND the live device snapshot),
+seed determinism at depth 2, the dispatch-phase sync regression
+(sanctioned syncs only at commit), and dispatch-observable TTFT
+accounting under deferred commits.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+from conftest import direct_greedy, tiny_model
+
+from repro.core.power import dynamic_policy, fixed_policy
+from repro.serving import PipelineServer
+
+MODEL = None
+
+
+def _model():
+    global MODEL
+    if MODEL is None:
+        MODEL = tiny_model()
+    return MODEL
+
+
+def _server(depth, **kw):
+    cfg, model, params = _model()
+    defaults = dict(
+        n_groups=2, n_replicas=2, policy="uniform",
+        harvest_bounds=(50.0, 60.0), max_len=64, max_batch=4,
+        page_size=8, seed=0,
+    )
+    defaults.update(kw)
+    return cfg, PipelineServer(model, params, async_depth=depth, **defaults)
+
+
+def _run_trace(depth, *, kappa_pm=None, staggered=False, fail_steps=(),
+               recover_steps=(), n_requests=5, n_tokens=4, **kw):
+    """One seeded trace: submissions, optional double failover/recovery,
+    drained to completion. Returns (per-request token tuples, stats).
+
+    ``fail_steps``/``recover_steps`` map step -> [(g, r), ...]. With
+    ``staggered`` the requests arrive one per slot — against multi-slot
+    calls (kappa >= 2) that is what actually stacks a replica's ring
+    past depth 1: a fresh admission dispatches while the previous call
+    is still in flight. Without it, every request is submitted up front
+    and members commit in lockstep (ring never exceeds 1)."""
+    if kappa_pm is not None:
+        kw.setdefault("pm_policy", fixed_policy(kappa_pm))
+        kw.setdefault("harvest_bounds", (60.0, 80.0))
+    cfg, server = _server(depth, **kw)
+    fail = dict(fail_steps)
+    recover = dict(recover_steps)
+    reqs = []
+    steps = 0
+    n_sub = 0
+    while n_sub < n_requests or not all(r.done or r.dropped for r in reqs):
+        while n_sub < n_requests:
+            req = server.submit(
+                (np.arange(4 + n_sub) + n_sub) % cfg.vocab_size, n_tokens
+            )
+            if req is not None:
+                reqs.append(req)
+            n_sub += 1
+            if staggered:
+                break
+        for g, r in fail.get(steps, ()):
+            server.fail_replica(g, r)
+        for g, r in recover.get(steps, ()):
+            server.recover_replica(g, r)
+        server.step()
+        steps += 1
+        assert steps < 5000, "trace did not drain"
+    return [tuple(r.generated) for r in reqs], server, reqs
+
+
+class TestAsyncDifferential:
+    """Token streams must be bit-for-bit equal across every depth."""
+
+    @pytest.mark.parametrize(
+        "kw",
+        [
+            dict(),
+            dict(paged=True),
+            dict(paged=True, kv_dtype="int8"),
+            dict(prefill_chunk=4),
+            dict(paged=True, prefill_chunk=4),
+        ],
+        ids=["dense", "paged", "paged-int8", "dense-chunked", "paged-chunked"],
+    )
+    def test_depths_token_exact(self, kw):
+        base, _, _ = _run_trace(0, **kw)
+        for depth in (1, 2, 3):
+            toks, _, _ = _run_trace(depth, **kw)
+            assert toks == base, f"depth {depth} diverged: {kw}"
+
+    @pytest.mark.parametrize(
+        "cache_kw",
+        [dict(), dict(paged=True), dict(paged=True, kv_dtype="int8")],
+        ids=["dense", "paged", "paged-int8"],
+    )
+    def test_double_failover_token_exact(self, cache_kw):
+        """Two replicas die at different steps mid-flight (one per
+        group), later recover; every depth discards its in-flight ring
+        without committing and re-queues — tokens stay identical."""
+        trace = dict(
+            **cache_kw,
+            kappa_pm=2,  # calls span 2 slots: failures hit mid-flight
+            staggered=True,
+            fail_steps={3: [(0, 0)], 6: [(1, 1)]},
+            recover_steps={9: [(0, 0)], 11: [(1, 1)]},
+        )
+        base, _, _ = _run_trace(0, **trace)
+        assert any(len(t) > 0 for t in base)
+        for depth in (1, 2, 3):
+            toks, server, _ = _run_trace(depth, **trace)
+            assert toks == base, f"depth {depth} diverged after failover"
+            assert server.stats.rerouted_stages > 0
+
+    def test_preemption_token_exact(self):
+        """Paged pool too small for every context: preemption/requeue
+        churn under every depth, same tokens."""
+        trace = dict(
+            paged=True, page_size=4, max_pages=6, n_groups=1, n_replicas=1,
+            n_requests=3, n_tokens=12, max_batch=4,
+        )
+        base, server0, _ = _run_trace(0, **trace)
+        assert server0.stats.preempted_jobs > 0
+        cfg, model, params = _model()
+        for t, n in zip(base, range(3)):
+            assert list(t) == direct_greedy(
+                model, params, (np.arange(4 + n) + n) % cfg.vocab_size, 12
+            )
+        for depth in (2, 3):
+            toks, server, _ = _run_trace(depth, **trace)
+            assert toks == base, f"depth {depth} diverged under preemption"
+
+    def test_ring_depth_engages_and_stays_exact(self):
+        """Staggered arrivals at kappa=2: the ring actually holds >= 2
+        in-flight calls at depth 2 (pipelining is real, not vacuous) and
+        the stream still matches sync."""
+        trace = dict(kappa_pm=2, staggered=True, n_requests=6,
+                     n_replicas=1)
+        base, server0, _ = _run_trace(0, **trace)
+        toks, server2, _ = _run_trace(2, **trace)
+        assert toks == base
+        assert server0.stats.inflight_peak == 1
+        assert server2.stats.inflight_peak >= 2
+
+    def test_depth1_degenerates_to_sync_exactly(self):
+        """depth=1 is today's sync engine with the readback moved to the
+        commit boundary: identical tokens AND identical ServerStats
+        (scheduling, dispatch counts, downtime — everything)."""
+        for kw in (
+            dict(kappa_pm=2, staggered=True),
+            dict(paged=True, prefill_chunk=4, kappa_pm=2, staggered=True),
+            dict(harvest_bounds=(8.0, 14.0)),  # battery-constrained
+        ):
+            base, server0, _ = _run_trace(0, **kw)
+            toks, server1, _ = _run_trace(1, **kw)
+            assert toks == base
+            assert dataclasses.asdict(server0.stats) == dataclasses.asdict(
+                server1.stats
+            )
+
+
+def _assert_page_invariants(server: PipelineServer):
+    """Conservation + exclusivity + block-table/snapshot consistency
+    across the whole fleet (check_conservation also verifies the live
+    device snapshot buffer against the working table)."""
+    for (g, r), mgr in server.managers.items():
+        mgr.check_conservation()
+        resident = {
+            req.rid
+            for req in server._active
+            if req.replicas is not None and req.replicas[g] == r
+        }
+        owners = {rid for rid, pages in mgr.pages.items() if pages}
+        assert owners <= resident, (
+            f"manager ({g},{r}) holds pages for non-residents "
+            f"{sorted(owners - resident)}"
+        )
+
+
+class TestAsyncLifecycleFuzz:
+    """The paged lifecycle fuzzer ported to the async engine: random
+    admit / fail / recover per step at depth 2, page conservation and
+    block-table/snapshot consistency checked after every step."""
+
+    def _fuzz(self, seed, steps=60, depth=2):
+        cfg, model, params = _model()
+        G, R = 2, 2
+        server = PipelineServer(
+            model, params, n_groups=G, n_replicas=R,
+            harvest_bounds=(12.0, 20.0), max_len=32, max_batch=2,
+            paged=True, page_size=4, max_pages=10,
+            async_depth=depth, seed=seed,
+        )
+        rng = np.random.default_rng(1000 + seed)
+        for _ in range(steps):
+            u = rng.uniform()
+            if u < 0.35:
+                server.submit(
+                    rng.integers(0, cfg.vocab_size, size=int(rng.integers(2, 9))),
+                    n_tokens=int(rng.integers(1, 5)),
+                )
+            elif u < 0.45:
+                server.fail_replica(int(rng.integers(G)), int(rng.integers(R)))
+            elif u < 0.60:
+                server.recover_replica(int(rng.integers(G)), int(rng.integers(R)))
+            server.step()
+            _assert_page_invariants(server)
+        for g in range(G):
+            for r in range(R):
+                server.recover_replica(g, r)
+        for _ in range(1500):
+            if not server._active and not server._pending:
+                break
+            server.step()
+            _assert_page_invariants(server)
+        assert not server._active and not server._pending
+        for mgr in server.managers.values():
+            assert mgr.pool.free_pages == mgr.pool.n_pages
+        stats = server.stats
+        assert stats.submitted == stats.completed_jobs + stats.dropped_jobs
+        return stats
+
+    def test_random_lifecycle_conserves_pages(self):
+        self._fuzz(seed=0)
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("seed", [1, 2])
+    def test_random_lifecycle_deep(self, seed):
+        self._fuzz(seed=seed, steps=120, depth=3)
+
+    def test_seed_determinism_async(self):
+        """Same seed, depth 2, battery-constrained (kappa varies):
+        identical ServerStats and identical token streams."""
+        cfg, model, params = _model()
+
+        def run():
+            server = PipelineServer(
+                model, params, n_groups=2, n_replicas=2,
+                harvest_bounds=(8.0, 14.0), max_len=64, max_batch=2,
+                paged=True, page_size=8, max_pages=8,
+                async_depth=2, seed=11,
+            )
+            stats = server.run(40, arrival_p=0.7, prompt_len=6, n_tokens=3)
+            tokens = sorted(
+                (r.rid, tuple(r.generated))
+                for r in server._active + list(server._pending)
+            )
+            return dataclasses.asdict(stats), tokens
+
+        s1, t1 = run()
+        s2, t2 = run()
+        assert s1 == s2
+        assert t1 == t2
+
+
+@pytest.mark.slow
+class TestAsyncSanitizer:
+    """The async step loop's sync contract: zero unsanctioned syncs,
+    per-step sanctioned count within the PR-6 budget, and every
+    sanctioned sync at the commit boundary — never during dispatch."""
+
+    def _drain(self, server, cfg, n_requests=4, n_tokens=3):
+        reqs = [
+            server.submit((np.arange(4 + 2 * (i % 2)) + i) % cfg.vocab_size,
+                          n_tokens=n_tokens)
+            for i in range(n_requests)
+        ]
+        while not all(r.done for r in reqs):
+            server.step()
+
+    @pytest.mark.parametrize("paged", [False, True], ids=["dense", "paged"])
+    def test_syncs_only_at_commit(self, paged):
+        from repro.analysis import TransferSanitizer, load_budgets
+
+        budgets = load_budgets()
+        budget = budgets["host_sync"]["per_step_budget"][
+            "paged" if paged else "dense"
+        ]
+        cfg, server = _server(
+            2, n_groups=1, n_replicas=1, harvest_bounds=(60.0, 80.0),
+            paged=paged, prefill_chunk=4,
+        )
+        self._drain(server, cfg)  # warmup: compile every dispatch shape
+        with TransferSanitizer() as san:
+            self._drain(server, cfg)
+        assert san.unsanctioned_total == 0
+        assert san.max_per_step <= budget
+        assert san.sanctioned_by_phase["dispatch"] == 0
+        assert san.sanctioned_by_phase["commit"] == san.sanctioned_total > 0
+
+    def test_injected_early_float_fails_by_rule_and_entry(self, monkeypatch):
+        """An injected eager float() readback at dispatch time must
+        surface through the host-sync gate as an unsanctioned sync,
+        named by rule and entry."""
+        import jax.numpy as jnp
+
+        from repro.analysis import load_budgets
+        from repro.analysis.recompile import run_host_sync_gate
+        from repro.serving import engine as engine_mod
+
+        orig = engine_mod.PipelineServer._start_call
+
+        def leaky_start_call(self, g, r, members):
+            call = orig(self, g, r, members)
+            if call is not None and call.readbacks:
+                float(jnp.sum(call.readbacks[0][0]))  # early host sync
+            return call
+
+        monkeypatch.setattr(
+            engine_mod.PipelineServer, "_start_call", leaky_start_call
+        )
+        findings = run_host_sync_gate(load_budgets())
+        assert findings, "injected dispatch-time float() was not caught"
+        assert all(f.rule == "host-sync" for f in findings)
+        entries = {f.entry_point for f in findings}
+        assert "dense:replica-step" in entries
+        assert any("bypassed" in f.message for f in findings)
+
+
+class TestAsyncTTFT:
+    """TTFT/downtime accounting under deferred commits: stamps happen at
+    dispatch-observable time (the slot the producing call's device work
+    completes), not when the completion queue drains."""
+
+    def test_depth2_queue_does_not_inflate_ttft(self):
+        """A kappa=1 call (B) queued behind a kappa=3 head (A) is ready
+        two slots before the ring drains it. Its TTFT must reflect the
+        ready slot — and beat the sync engine, which could not even
+        dispatch B until A finished."""
+        cfg, model, params = _model()
+
+        def run(depth):
+            server = PipelineServer(
+                model, params, n_groups=1, n_replicas=1, policy="uniform",
+                pm_policy=dynamic_policy(100), harvest_bounds=(0.0, 0.0),
+                max_len=64, max_batch=4, async_depth=depth, seed=0,
+            )
+            b = server.budgets[0][0]
+            b.level = 30.0  # < 40: PM1, kappa=3
+            server.submit(np.arange(6) % cfg.vocab_size, n_tokens=1)
+            server.step()  # slot 1: A dispatched at kappa=3
+            b.level = 100.0  # >= 60: PM3, kappa=1 for the next dispatch
+            req_b = server.submit(np.arange(5) % cfg.vocab_size, n_tokens=1)
+            for _ in range(8):
+                server.step()
+                if req_b.done:
+                    break
+            assert req_b.done
+            return req_b
+
+        fast = run(2)
+        # B submitted at slot 1, dispatched slot 2 at kappa=1 -> device
+        # work done at slot 2 (ttft_slots == 1) even though the ring
+        # drains it behind A at slot 3. Commit-drain stamping would
+        # report 2.
+        assert fast.ttft_slots == 1
+        slow = run(0)
+        # Sync engine: B waits for A's call to finish before it can even
+        # dispatch.
+        assert slow.ttft_slots > fast.ttft_slots
+
+    def test_downtime_identical_across_depths(self):
+        """downtime_replica_slots is stamped in the harvest phase
+        (dispatch-observable), so a constrained trace reports identical
+        downtime at every depth where scheduling coincides (0 vs 1)."""
+        # Enough work that replicas repeatedly drain below e_th between
+        # recharges (a call admitted just above CE ends below the
+        # availability floor).
+        kw = dict(harvest_bounds=(1.0, 3.0), n_requests=4, n_tokens=8)
+        _, s0, _ = _run_trace(0, **kw)
+        _, s1, _ = _run_trace(1, **kw)
+        assert s0.stats.downtime_replica_slots == s1.stats.downtime_replica_slots
+        assert s0.stats.downtime_replica_slots > 0
