@@ -13,6 +13,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
             (BENCH_chunked.json)
   quant_kv — int8 vs compute-dtype KV pages: capacity at equal bytes,
             throughput, greedy agreement (BENCH_quant_kv.json)
+  spec   — speculative draft-verify vs plain paged decode: accepted
+            tokens/s + energy per accepted token (BENCH_spec.json)
   sweep  — per-scenario re-jit vs one vmapped sweep (writes BENCH_sweep.json)
   roofline — per-cell dry-run roofline terms (deliverable g)
 
@@ -88,6 +90,7 @@ def main() -> None:
         quant_kv_bench,
         roofline_table,
         serve_bench,
+        spec_bench,
         sweep_bench,
     )
 
@@ -103,6 +106,7 @@ def main() -> None:
         paged_bench,
         chunked_bench,
         quant_kv_bench,
+        spec_bench,
         sweep_bench,
         roofline_table,
     ):

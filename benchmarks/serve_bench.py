@@ -104,7 +104,10 @@ def batch_sweep(
         ]
         for _ in range(warmup_slots):  # compile prefill/decode dispatches
             server.step()
-        warm_tokens = server.stats.tokens_generated
+        # accepted_tokens is the cross-engine comparison metric: equal to
+        # tokens_generated under plain decode, accepted tokens under the
+        # speculative engine (see spec_bench) — same denominator either way.
+        warm_tokens = server.stats.accepted_tokens
         warm_decode_calls = server.stats.decode_calls
         t0 = time.perf_counter()
         steps = 0
@@ -119,10 +122,11 @@ def batch_sweep(
         )
         if findings:  # compile-count budget: one decode shape per stage
             raise SystemExit("\n".join(f"FAIL {f}" for f in findings))
-        tokens = server.stats.tokens_generated - warm_tokens
+        tokens = server.stats.accepted_tokens - warm_tokens
         tps = tokens / dt
         report[str(mb)] = {
             "tokens_per_s": round(tps, 1),
+            "accepted_tokens_per_s": round(tps, 1),
             "wall_s": round(dt, 3),
             "tokens": tokens,
             "decode_calls": server.stats.decode_calls - warm_decode_calls,
@@ -180,7 +184,9 @@ def run(
             csv_row(
                 f"serve/{policy}",
                 dt * 1e6 / max(stats.tokens_generated, 1),
-                f"tokens={stats.tokens_generated} jobs={stats.completed_jobs} "
+                f"tokens={stats.tokens_generated} "
+                f"accepted={stats.accepted_tokens} "
+                f"jobs={stats.completed_jobs} "
                 f"dropped={stats.dropped_jobs} queued={stats.queued_jobs} "
                 f"downtime={stats.downtime_fraction:.3f} "
                 f"planned_downtime={plan[policy]:.3f}",

@@ -1,0 +1,276 @@
+"""Speculative draft-verify decoding benchmark: accepted tokens/s.
+
+The speculative engine's win is *dispatch-count*: a round commits up to
+``spec_k + 1`` tokens from two dispatches (one scanned draft call, one
+``verify_step_paged`` chunk), where plain paged decode pays one dispatch
+per token. On the CI container's CPU "device" the per-dispatch host
+assembly cost dominates the smoke model's sub-millisecond kernels, so
+the A/B below isolates exactly that seam — the same seeded workload is
+drained through plain paged decode and through the speculative engine,
+recording
+
+* accepted tokens/s (``ServerStats.accepted_tokens``; identical to
+  ``tokens_generated`` in both engines — greedy accept makes the two
+  streams bit-for-bit equal, so the benchmark compares like for like);
+* energy per accepted token (``energy_charged / accepted_tokens``:
+  the scheduler charges CE(PM)/kappa per *call*, so committing more
+  tokens per call divides the same energy over more tokens);
+* round acceptance rate and dispatch counts.
+
+The draft is the target's live 1-layer prefix (see ``_models``): a
+genuinely quarter-depth draft with ~1.0 acceptance by construction —
+the random-weights stand-in for a distilled draft pairing. The
+cross-model pairing sweep in ``tests/test_spec_decode.py`` covers the
+acceptance<1 regimes. Passes
+are interleaved plain/spec and the headline ratio is the median over
+temporally adjacent pairs (cancels container drift); per-batch bests of
+3 land in ``BENCH_spec.json`` via the shared envelope.
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import time
+
+import numpy as np
+
+from repro.serving import PipelineServer, reset_trace_counts
+
+from .common import csv_row, write_bench
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_spec.json"
+
+_MODELS = None
+
+
+def _models():
+    """Target + draft for the speculative A/B.
+
+    Target: the async-bench-scaled smoke model (4 layers x d256) —
+    enough per-layer compute that depth, not fixed per-call overhead,
+    dominates a dispatch. Draft: the target's *live 1-layer prefix* —
+    the deeper layers' residual writers (``attn/wo``, ``mlp/wo``) are
+    zeroed in the target, so its function collapses to the first layer
+    while its cost stays full-depth, and the draft (the sliced first
+    layer sharing embed/unembed/final-norm) predicts the same greedy
+    tokens at a quarter of the depth. This is the random-weights
+    stand-in for a distilled draft pairing: acceptance ~1.0 with a
+    genuinely cheaper draft, the regime the registry's
+    ``SPEC_DRAFT_PAIRS`` targets. The acceptance<1 regimes are covered
+    by the pairing sweep in ``tests/test_spec_decode.py``."""
+    global _MODELS
+    if _MODELS is None:
+        import dataclasses
+
+        import jax
+
+        from repro.configs import get_smoke_config
+        from repro.models import build_model, init_from_template
+
+        tcfg = dataclasses.replace(
+            get_smoke_config("stablelm-1.6b"),
+            dtype="float32",
+            param_dtype="float32",
+            n_layers=4,
+            d_model=256,
+            n_heads=8,
+            n_kv_heads=8,
+            d_ff=1024,
+        )
+        target = build_model(tcfg)
+        params = init_from_template(
+            target.template, jax.random.PRNGKey(0), "float32"
+        )
+        c0 = dict(params["classes"]["c0"])
+        c0["attn"] = {**c0["attn"], "wo": c0["attn"]["wo"].at[1:].set(0.0)}
+        c0["mlp"] = {**c0["mlp"], "wo": c0["mlp"]["wo"].at[1:].set(0.0)}
+        params = {**params, "classes": {**params["classes"], "c0": c0}}
+        draft = build_model(dataclasses.replace(tcfg, n_layers=1))
+        dparams = {
+            **params,
+            "classes": {
+                **params["classes"],
+                "c0": jax.tree_util.tree_map(lambda x: x[:1], c0),
+            },
+        }
+        _MODELS = (tcfg, target, params, draft, dparams)
+    return _MODELS
+
+
+def _drain_measured(
+    spec_k: int | None,
+    *,
+    max_batch: int,
+    n_requests: int,
+    n_tokens: int,
+    prompt_len: int = 6,
+) -> dict:
+    """Drain one workload (plain paged when ``spec_k`` is None, else
+    speculative), measuring post-warmup accepted tokens/s and energy per
+    accepted token. Warmup is a throwaway wave of the same batch shape
+    drained to completion first, so every dispatch shape (prefill, draft
+    ingest/round, verify, decode) is compiled before the clock starts."""
+    cfg, model, params, draft, dparams = _models()
+    reset_trace_counts()  # each engine run is its own compile universe
+    server = PipelineServer(
+        model,
+        params,
+        n_groups=1,
+        n_replicas=1,
+        policy="uniform",
+        harvest_bounds=(60.0, 80.0),  # energy-unconstrained: pure compute
+        max_len=128,
+        max_batch=max_batch,
+        paged=True,
+        page_size=16,
+        async_depth=2,
+        seed=0,
+        **(
+            dict(spec_draft=(draft, dparams), spec_k=spec_k)
+            if spec_k is not None
+            else {}
+        ),
+    )
+
+    def drain(wave_tokens: int, offset: int) -> int:
+        reqs = [
+            server.submit(
+                (np.arange(prompt_len) + offset + i) % cfg.vocab_size,
+                wave_tokens,
+            )
+            for i in range(n_requests)
+        ]
+        steps = 0
+        while not all(r.done or r.dropped for r in reqs):
+            server.step()
+            steps += 1
+            if steps > 100 * n_requests * wave_tokens:  # pragma: no cover
+                raise RuntimeError("spec bench did not drain")
+        return steps
+
+    # Warmup wave: one full speculative round per request (spec_k + 1
+    # tokens) compiles every dispatch shape the measured wave reuses.
+    drain((spec_k or 4) + 1, offset=0)
+    warm_tokens = server.stats.accepted_tokens
+    warm_energy = server.stats.energy_charged
+    t0 = time.perf_counter()
+    steps = drain(n_tokens, offset=1)
+    dt = time.perf_counter() - t0
+    tokens = server.stats.accepted_tokens - warm_tokens
+    energy = server.stats.energy_charged - warm_energy
+    st = server.stats
+    return {
+        "accepted_tokens_per_s": round(tokens / dt, 1),
+        "wall_s": round(dt, 3),
+        "accepted_tokens": tokens,
+        "steps": steps,
+        "decode_calls": st.decode_calls,
+        "draft_calls": st.draft_calls,
+        "verify_calls": st.verify_calls,
+        "spec_rounds": st.spec_rounds,
+        "acceptance_rate": round(st.acceptance_rate, 3),
+        "energy_per_accepted_token": round(energy / max(tokens, 1), 3),
+    }
+
+
+def _ab_at_batch(
+    max_batch: int, n_tokens: int, spec_k: int, repeats: int
+) -> dict:
+    """Interleaved plain/spec passes at one batch size; bests of N plus
+    a drift-cancelling median-of-adjacent-pairs ratio."""
+    plain_passes, spec_passes = [], []
+    for _ in range(repeats):
+        plain_passes.append(_drain_measured(
+            None, max_batch=max_batch, n_requests=max_batch,
+            n_tokens=n_tokens,
+        ))
+        spec_passes.append(_drain_measured(
+            spec_k, max_batch=max_batch, n_requests=max_batch,
+            n_tokens=n_tokens,
+        ))
+    plain = max(plain_passes, key=lambda d: d["accepted_tokens_per_s"])
+    spec = max(spec_passes, key=lambda d: d["accepted_tokens_per_s"])
+    ratio = float(np.median([
+        s["accepted_tokens_per_s"] / max(p["accepted_tokens_per_s"], 1e-9)
+        for p, s in zip(plain_passes, spec_passes)
+    ]))
+    energy_ratio = float(np.median([
+        s["energy_per_accepted_token"]
+        / max(p["energy_per_accepted_token"], 1e-9)
+        for p, s in zip(plain_passes, spec_passes)
+    ]))
+    return {
+        "plain": plain,
+        "spec": spec,
+        "plain_passes_tokens_per_s": [
+            p["accepted_tokens_per_s"] for p in plain_passes
+        ],
+        "spec_passes_tokens_per_s": [
+            p["accepted_tokens_per_s"] for p in spec_passes
+        ],
+        "accepted_tokens_per_s_ratio_spec_vs_plain": round(ratio, 2),
+        "energy_per_token_ratio_spec_vs_plain": round(energy_ratio, 2),
+    }
+
+
+def run(smoke: bool = False, spec_k: int = 4, repeats: int | None = None) -> list[str]:
+    if smoke:
+        batches, n_tokens = (8,), 10
+    else:
+        # n_tokens a multiple of spec_k + 1: at ~full acceptance every
+        # round runs the one already-compiled verify width.
+        batches, n_tokens = (16, 64), 50
+    if repeats is None:
+        repeats = 1 if smoke else 3
+    report: dict = {"spec_k": spec_k, "n_tokens": n_tokens, "smoke": smoke,
+                    "repeats": repeats, "batches": {}}
+    rows: list[str] = []
+    for max_batch in batches:
+        ab = _ab_at_batch(max_batch, n_tokens, spec_k, repeats)
+        report["batches"][str(max_batch)] = ab
+        plain, spec = ab["plain"], ab["spec"]
+        rows.append(csv_row(
+            f"spec/plain_batch{max_batch}",
+            0.0,
+            f"accepted_tokens_per_s={plain['accepted_tokens_per_s']} "
+            f"energy_per_token={plain['energy_per_accepted_token']}",
+        ))
+        rows.append(csv_row(
+            f"spec/k{spec_k}_batch{max_batch}",
+            0.0,
+            f"accepted_tokens_per_s={spec['accepted_tokens_per_s']} "
+            f"acceptance={spec['acceptance_rate']} "
+            f"energy_per_token={spec['energy_per_accepted_token']}",
+        ))
+        rows.append(csv_row(
+            f"spec/speedup_batch{max_batch}",
+            0.0,
+            f"spec_vs_plain="
+            f"{ab['accepted_tokens_per_s_ratio_spec_vs_plain']:.2f}x "
+            f"energy_ratio="
+            f"{ab['energy_per_token_ratio_spec_vs_plain']:.2f}x",
+        ))
+    if not smoke:
+        write_bench(BENCH_JSON, "spec_decode", report)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="small CI run: batch 8, 1 repeat, no BENCH_spec.json",
+    )
+    ap.add_argument(
+        "--spec-k", type=int, default=4,
+        help="draft tokens proposed per speculative round",
+    )
+    args = ap.parse_args()
+    for row in run(smoke=args.smoke, spec_k=args.spec_k):
+        print(row, flush=True)
+
+
+if __name__ == "__main__":
+    main()

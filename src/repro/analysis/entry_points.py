@@ -3,9 +3,11 @@
 Out of the box the lint covers, for every ``supports_paged`` registry
 model (smoke config, real compute dtype): ``prefill_batch`` /
 ``decode_batch`` (the dense continuous-batching paths),
-``prefill_chunk_batch`` (dense chunked prefill), ``decode_step_paged``
-and ``prefill_chunk_paged`` in both ``attn_impl`` variants (``xla``
-gather fallback vs ``pallas`` kernels) plus an int8-pool variant, and
+``prefill_chunk_batch`` (dense chunked prefill), ``decode_step_paged``,
+``prefill_chunk_paged`` and ``verify_step_paged`` (the speculative
+draft-verify chunk, traced at the default ``spec_k``) in both
+``attn_impl`` variants (``xla`` gather fallback vs ``pallas`` kernels)
+plus an int8-pool variant, and
 the dense paths of every non-paged LM family. The two Pallas paged
 kernels are also traced standalone (``kernel:*``) so the zero-gather
 budget binds at the kernel boundary, not just through the model.
@@ -37,6 +39,9 @@ __all__ = ["EntryPoint", "build_entry_points", "paged_model_names"]
 # chunks, an NB-block table over a P-page pool plus the scratch page).
 _W, _C, _S, _N, _MAX_LEN = 4, 8, 8, 2, 64
 _PAGE, _NB, _P = 16, 4, 16
+# Speculative verify traces at the engine's default spec_k: the chunk
+# carries [last_token, d_1..d_k] = k + 1 positions per lane.
+_SPEC_K = 4
 
 
 @dataclasses.dataclass
@@ -189,6 +194,18 @@ def _model_entries(name: str) -> list[EntryPoint]:
                     params, chunk, pools, offs, valids, bt
                 )
 
+            def make_verify_paged(cfg_v=cfg_v, kv_dtype=kv_dtype):
+                model = build_model(cfg_v)
+                params = abstract_params(model.template, cfg_v.param_dtype)
+                chunk = _sds((_W, _SPEC_K + 1), jnp.int32)
+                pools = _pool_sds(cfg_v, kv_dtype)
+                offs = _sds((_W,), jnp.int32)
+                valids = _sds((_W,), jnp.int32)
+                bt = _sds((_W, _NB), jnp.int32)
+                return jax.make_jaxpr(model.verify_step_paged)(
+                    params, chunk, pools, offs, valids, bt
+                )
+
             pool_meta = dict(
                 kv_pool_bytes=_pool_bytes(cfg_v, kv_dtype),
                 kv_pool_bytes_fp32=_pool_bytes(cfg_v, jnp.float32),
@@ -197,6 +214,8 @@ def _model_entries(name: str) -> list[EntryPoint]:
                 tokens=_W, **pool_meta)
             add("prefill_chunk_paged", variant, make_chunk_paged,
                 tokens=_W * _C, **pool_meta)
+            add("verify_step_paged", variant, make_verify_paged,
+                tokens=_W * (_SPEC_K + 1), **pool_meta)
     return entries
 
 

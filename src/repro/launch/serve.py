@@ -16,6 +16,7 @@ import jax
 
 from ..configs import ARCH_NAMES, get_config, get_smoke_config
 from ..models import build_model, init_from_template
+from ..models.registry import default_draft_for
 from ..serving import PipelineServer
 
 
@@ -63,6 +64,15 @@ def main() -> None:
                          "N-token chunks co-scheduled with decode (one compiled "
                          "prefill shape regardless of prompt lengths, bounded "
                          "per-step prefill work); None = whole-prompt prefill")
+    ap.add_argument("--spec-draft", choices=ARCH_NAMES + ("auto",), default=None,
+                    help="speculative decoding: draft architecture that "
+                         "proposes spec-k tokens per round, verified in one "
+                         "paged chunk call (bit-for-bit vs plain decode). "
+                         "'auto' uses the registry pairing for --arch "
+                         "(repro.models.registry.SPEC_DRAFT_PAIRS). "
+                         "Requires --paged")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens proposed per speculative round")
     ap.add_argument("--arrival-p", type=float, default=0.5)
     ap.add_argument("--harvest", type=float, nargs=2, default=(6.0, 10.0))
     ap.add_argument("--seed", type=int, default=0)
@@ -72,6 +82,20 @@ def main() -> None:
     cfg = dataclasses.replace(cfg, dtype="float32", param_dtype="float32")
     model = build_model(cfg)
     params = init_from_template(model.template, jax.random.PRNGKey(0), cfg.param_dtype)
+
+    spec_draft = None
+    if args.spec_draft is not None:
+        name = (
+            default_draft_for(args.arch) if args.spec_draft == "auto"
+            else args.spec_draft
+        )
+        dcfg = get_smoke_config(name) if args.smoke else get_config(name)
+        dcfg = dataclasses.replace(dcfg, dtype="float32", param_dtype="float32")
+        draft = build_model(dcfg)
+        dparams = init_from_template(
+            draft.template, jax.random.PRNGKey(1), dcfg.param_dtype
+        )
+        spec_draft = (draft, dparams)
 
     server = PipelineServer(
         model,
@@ -90,6 +114,8 @@ def main() -> None:
         prefill_chunk=args.prefill_chunk,
         max_park_steps=args.max_park_steps if args.max_park_steps > 0 else None,
         async_depth=args.async_depth,
+        spec_draft=spec_draft,
+        spec_k=args.spec_k,
         seed=args.seed,
     )
     stats = server.run(args.slots, arrival_p=args.arrival_p)
@@ -98,6 +124,12 @@ def main() -> None:
         if args.paged
         else ""
     )
+    if spec_draft is not None:
+        paged_info += (
+            f" spec_rounds={stats.spec_rounds}"
+            f" acceptance={stats.acceptance_rate:.3f}"
+            f" accepted_tokens={stats.accepted_tokens}"
+        )
     print(
         f"policy={args.policy}: submitted={stats.submitted} "
         f"completed={stats.completed_jobs} dropped={stats.dropped_jobs} "

@@ -42,7 +42,31 @@ import jax
 from . import encdec, transformer
 from .common import ModelConfig
 
-__all__ = ["Model", "build_model"]
+__all__ = ["Model", "build_model", "SPEC_DRAFT_PAIRS", "default_draft_for"]
+
+# Speculative decoding: draft-model pairing per target architecture.
+# A draft must share the target's tokenizer/vocab family so draft token
+# ids are target token ids (the repo's configs all use one vocab space);
+# it should be far cheaper than its target so k draft steps cost less
+# than the one verify call they save. The self-pairings are the
+# degenerate-but-useful case: with randomly initialized weights (tests,
+# benchmarks) only a self-draft agrees with its target's greedy chain,
+# so acceptance-rate plumbing can be exercised end to end — real
+# deployments point small-at-large (see ``default_draft_for``).
+SPEC_DRAFT_PAIRS: dict[str, str] = {
+    "qwen2.5-14b": "stablelm-1.6b",
+    "granite-20b": "stablelm-1.6b",
+    "internvl2-76b": "stablelm-1.6b",
+    "qwen3-moe-30b-a3b": "phi4-mini-3.8b",
+    "stablelm-1.6b": "stablelm-1.6b",
+    "phi4-mini-3.8b": "phi4-mini-3.8b",
+}
+
+
+def default_draft_for(target: str) -> str:
+    """The registry's draft architecture for ``target`` (speculative
+    decoding); targets without a declared pairing draft for themselves."""
+    return SPEC_DRAFT_PAIRS.get(target, target)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,6 +87,9 @@ class Model:
     #   (params, chunk [N,1,C(,D)], caches [N,...], offsets [N], valids [N])
     prefill_chunk_paged: Callable | None = None  # (params, chunk [W,C(,D)],
     #   pools, offsets [W] (-1 = masked), valids [W], block_tables [W,NB])
+    verify_step_paged: Callable | None = None  # speculative verify: same
+    #   signature as prefill_chunk_paged; lane w holds [last_token, d_1..d_k]
+    #   at positions offsets[w].. — one chunk call verifies k+1 positions
 
     @property
     def name(self) -> str:
@@ -104,6 +131,7 @@ def build_model(cfg: ModelConfig) -> Model:
     prefill_batch, decode_batch = _batched_entry_points(prefill, decode)
     decode_paged = None
     prefill_chunk = prefill_chunk_batch = prefill_chunk_paged = None
+    verify_step_paged = None
     if transformer.supports_paged(cfg):
         decode_paged = lambda p, t, pools, lens, bt: (
             transformer.decode_step_paged(p, t, pools, lens, bt, cfg)
@@ -122,6 +150,9 @@ def build_model(cfg: ModelConfig) -> Model:
         prefill_chunk_paged = lambda p, ch, pools, offs, vals, bt: (
             transformer.prefill_chunk_paged(p, ch, pools, offs, vals, bt, cfg)
         )
+        verify_step_paged = lambda p, ch, pools, offs, vals, bt: (
+            transformer.verify_step_paged(p, ch, pools, offs, vals, bt, cfg)
+        )
     return Model(
         cfg=cfg,
         template=transformer.lm_template(cfg),
@@ -137,4 +168,5 @@ def build_model(cfg: ModelConfig) -> Model:
         prefill_chunk=prefill_chunk,
         prefill_chunk_batch=prefill_chunk_batch,
         prefill_chunk_paged=prefill_chunk_paged,
+        verify_step_paged=verify_step_paged,
     )

@@ -54,6 +54,7 @@ __all__ = [
     "decode_step_paged",
     "prefill_chunk",
     "prefill_chunk_paged",
+    "verify_step_paged",
     "supports_paged",
     "init_cache_shapes",
     "cache_logical_axes",
@@ -690,3 +691,34 @@ def prefill_chunk_paged(
 
     x, pools = jax.lax.scan(body, x, (p_run, pools))
     return _unembed(params, x, cfg), pools
+
+
+def verify_step_paged(
+    params, chunk, pools: dict, offsets, valids, block_tables, cfg: ModelConfig
+):
+    """Verify ``k + 1`` speculative positions in one paged chunk call.
+
+    Draft-verify decoding's target step: the chunk call shape (C query
+    positions against a growing paged prefix, causal-masked in-kernel
+    with LSE merge) *is* the verification step, so this delegates to
+    :func:`prefill_chunk_paged` — no new kernel. Lane ``w`` carries
+    ``[last_committed_token, d_1 .. d_k]`` at absolute positions
+    ``offsets[w] .. offsets[w] + k``; position ``j``'s output row is the
+    logits the sequential decode path would have produced after
+    consuming the first ``j + 1`` of those inputs, **bit-for-bit**
+    (per-row softmax/matmul reductions are independent of the other
+    rows, and the scattered K/V page rows are byte-identical to the ones
+    :func:`decode_step_paged` writes — ``tests/test_spec_decode.py``
+    asserts both), which is what makes greedy accept/reject exact:
+    accepting the longest prefix with ``d_j == argmax(row[j - 1])`` and
+    rewinding the rest reproduces plain decode's token stream exactly.
+
+    Same signature and coverage as :func:`prefill_chunk_paged`
+    (``supports_paged`` families; ``valids[w] - 1`` drafts per lane,
+    ``offsets[w] == -1`` masks a lane; int8 pools quantize rows at
+    scatter, so rewound-and-rewritten rows stay exact). Returns
+    ``([W, C, V|D] per-position outputs, updated pools)``.
+    """
+    return prefill_chunk_paged(
+        params, chunk, pools, offsets, valids, block_tables, cfg
+    )

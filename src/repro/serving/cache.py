@@ -203,6 +203,20 @@ class KVCacheManager:
         """
         raise NotImplementedError
 
+    def rollback(self, rid: int, slot: int, n: int) -> None:
+        """Un-write the last ``n`` cache entries of ``rid``'s context
+        (speculative decoding: rejected draft rows are rewound).
+
+        Pure host accounting — the device rows stay physically written
+        but become stale-beyond-length, which is safe because every
+        consumer derives positions from the host ``lengths`` mirror and
+        causal attention never reaches past it; the next call re-writes
+        those positions before attending them. Dense: length decrement.
+        Paged: length decrement plus freeing any tail pages the shorter
+        context no longer needs (conservation-checked).
+        """
+        raise NotImplementedError
+
     def release(self, rid: int, slot: int | None) -> None:
         """Return the slot and every page/entry owned by ``rid``."""
         raise NotImplementedError
@@ -262,6 +276,16 @@ class DenseSlotCache(KVCacheManager):
                 "(submit should have rejected this request)"
             )
         return True
+
+    def rollback(self, rid: int, slot: int, n: int) -> None:
+        if self.slots[slot] != rid:
+            raise PageError(f"rollback of slot {slot} not owned by rid {rid}")
+        if n < 0 or n > self.lengths[slot]:
+            raise PageError(
+                f"rid {rid}: rollback of {n} entries from a "
+                f"{self.lengths[slot]}-entry context"
+            )
+        self.lengths[slot] -= n
 
     def release(self, rid: int, slot: int | None) -> None:
         self._drop_slot(rid, slot)
@@ -362,6 +386,29 @@ class PagedKVCache(KVCacheManager):
         if grown:
             self._set_row(slot, held)
         return True
+
+    def rollback(self, rid: int, slot: int, n: int) -> None:
+        if self.slots[slot] != rid:
+            raise PageError(f"rollback of slot {slot} not owned by rid {rid}")
+        if n < 0 or n > self.lengths[slot]:
+            raise PageError(
+                f"rid {rid}: rollback of {n} entries from a "
+                f"{self.lengths[slot]}-entry context"
+            )
+        new_len = int(self.lengths[slot]) - n
+        self.lengths[slot] = new_len
+        if n == 0:
+            return
+        held = self.pages.get(rid, [])
+        # A zero-length context keeps zero pages (mirrors reserve(0));
+        # otherwise the tail pages the shorter context no longer touches
+        # go back to the pool and the block-table row is re-scratched.
+        need = self.pool.blocks_for(new_len) if new_len > 0 else 0
+        if len(held) > need:
+            tail = held[need:]
+            del held[need:]
+            self.pool.free(tail, rid)
+            self._set_row(slot, held)
 
     def release(self, rid: int, slot: int | None) -> None:
         held = self.pages.pop(rid, [])

@@ -94,6 +94,30 @@ request state is ever mutated from a call that did not commit. Token
 streams are therefore bit-for-bit identical across every depth
 (``tests/test_async_engine.py`` proves this differentially under
 admission, chunked prefill, preemption and double failover).
+
+Speculative draft-verify decoding (``spec_draft=(model, params)``)
+------------------------------------------------------------------
+Plain decode pays one full pipeline dispatch per token. With a draft
+model attached, each decode round instead (1) runs the draft
+autoregressively for ``spec_k`` greedy tokens in ONE scanned dispatch
+on the stage-0 replica (argmax chained on device — no host sync), then
+(2) verifies all ``spec_k + 1`` positions in ONE
+``verify_step_paged`` chunk call per stage — the existing paged
+chunk-prefill computation, no new kernel. The accept rule is greedy
+prefix match on the verify argmaxes, so committed streams are
+**bit-for-bit identical** to plain paged decode (the paged chunk and
+decode paths share one attention reduction order — proven in
+``tests/test_spec_decode.py``); a round commits between 1 (all drafts
+rejected: the verify's own argmax) and ``spec_k + 1`` tokens per
+pipeline pass. Rejected rows are rewound through
+``KVCacheManager.rollback`` (pure host accounting: stale rows past the
+length mirror are never attended and are re-written before any later
+read). The commit finalizer is deferred-readback compatible with the
+async ring at any depth; a round broken by replica death or preemption
+is rewound by ``StepScheduler.rewind_spec`` to exactly the state plain
+decode would have left. Energy is charged per *call*; throughput is
+reported per *accepted token* (``ServerStats.accepted_tokens``,
+``acceptance_rate``).
 """
 
 from __future__ import annotations
@@ -186,10 +210,20 @@ class ServerStats:
     dropped_jobs: int = 0
     queued_jobs: int = 0  # submissions that waited in the pending queue
     tokens_generated: int = 0
+    accepted_tokens: int = 0  # committed tokens, dispatch-observable —
+    # identical to tokens_generated for the plain engine; the shared
+    # metric spec and plain engines are compared on (a speculative round
+    # commits a variable number of accepted tokens per verify call)
     stage_executions: int = 0  # per-request stage work units
     prefill_calls: int = 0  # batched JAX dispatches (whole-prompt prefill)
     chunk_prefill_calls: int = 0  # batched JAX dispatches (chunked prefill)
     decode_calls: int = 0  # batched JAX dispatches (decode)
+    draft_calls: int = 0  # speculative: draft-model scan dispatches
+    verify_calls: int = 0  # speculative: target verify chunk dispatches
+    spec_rounds: int = 0  # speculative rounds committed
+    spec_proposed: int = 0  # draft tokens proposed to verification
+    spec_accepted: int = 0  # draft tokens accepted (excl. bonus tokens)
+    energy_charged: float = 0.0  # total CE(PM)/kappa charged across calls
     rerouted_stages: int = 0
     preempted_jobs: int = 0  # paged: evicted on page exhaustion, requeued
     aged_placements: int = 0  # parked > max_park_steps: force-placed
@@ -204,6 +238,11 @@ class ServerStats:
     def downtime_fraction(self) -> float:
         denom = self.slots * self.n_groups * self.n_replicas
         return self.downtime_replica_slots / max(denom, 1)
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of proposed draft tokens the target accepted."""
+        return self.spec_accepted / max(self.spec_proposed, 1)
 
 
 def _pad_tail(x, C: int):
@@ -276,6 +315,86 @@ def _emit_chunk_outputs(server, g, jobs, outputs, mgr, argmax, hidden_at, readba
                 outputs[i] = ("chunk_done", int(toks[slot, valid - 1]), valid)
 
         readbacks.append((argmax, fin))
+
+
+class _SpecState:
+    """Speculative-decoding state: the draft model, its per-stage-0-replica
+    slot-stacked dense caches, the host lockstep mirrors, and the two
+    jitted draft entry points.
+
+    The draft runs *unpartitioned* on each stage-0 replica: one dense
+    cache of ``max_batch`` lanes keyed by the replica's stage-0 slot ids.
+    ``rid``/``lens`` are host mirrors of which request owns each draft
+    lane and how many rows of its true stream (prompt + committed
+    tokens) are valid — a mismatched rid (lane reuse, failover) rebuilds
+    the lane from position 0 via fixed-width catch-up ingests, so draft
+    state needs no abort protocol of its own: it is *advisory* and every
+    committed token comes from the target's verify.
+    """
+
+    def __init__(self, server: "PipelineServer", draft: Model, draft_params, k: int):
+        self.model = draft
+        self.params = draft_params
+        self.k = k
+        W = server.max_batch
+        # Draft rows past the target's max_len are never *read* (requests
+        # complete within max_len) but the fixed-width ingest and the
+        # k-step scan may *write* up to k positions past the committed
+        # context; the headroom keeps every dynamic-slice write in bounds
+        # (a clamped start would silently overwrite live rows).
+        shapes = draft.cache_shapes(1, server.max_len + k + 1)
+        self.caches = {
+            r: jax.tree_util.tree_map(
+                lambda sh: jnp.zeros((W,) + tuple(sh.shape), sh.dtype), shapes
+            )
+            for r in range(server.R)
+        }
+        self.rid = {r: np.full((W,), -1, np.int64) for r in range(server.R)}
+        self.lens = {r: np.zeros((W,), np.int64) for r in range(server.R)}
+
+        model = draft
+
+        def merge(mask, new, old):
+            return jax.tree_util.tree_map(
+                lambda n, o: jnp.where(
+                    mask.reshape((mask.shape[0],) + (1,) * (n.ndim - 1)), n, o
+                ),
+                new,
+                old,
+            )
+
+        @partial(jax.jit, donate_argnums=(2,))
+        def draft_ingest(params, buf, cache, offs, valids, mask):
+            # buf: [W, 1, C] catch-up token chunks (lane rebuilds after
+            # failover / reuse); masked-out lanes keep their cache.
+            _count_trace("draft_ingest", 0, buf.shape[0], buf.shape[2])
+            _, new = model.prefill_chunk_batch(
+                params, {"tokens": buf}, cache, offs, valids
+            )
+            return merge(mask, new, cache)
+
+        @partial(jax.jit, donate_argnums=(2,))
+        def draft_round(params, buf, cache, offs, valids, tok0, mask):
+            # ONE dispatch per round: ingest the <= C tokens the draft has
+            # not seen yet (usually the previous round's accepted tail),
+            # then scan k greedy steps chaining the argmax on device —
+            # the k draft tokens never touch the host inside the round.
+            _count_trace("draft_round", 0, buf.shape[0], buf.shape[2])
+            _, c = model.prefill_chunk_batch(
+                params, {"tokens": buf}, cache, offs, valids
+            )
+
+            def step(carry, _):
+                tok, c = carry
+                logits, c = model.decode_batch(params, tok[:, None, None], c)
+                nxt = jnp.argmax(logits[:, 0, -1], axis=-1).astype(jnp.int32)
+                return (nxt, c), nxt
+
+            (_, c), drafts = jax.lax.scan(step, (tok0, c), None, length=k)
+            return drafts.T, merge(mask, c, cache)  # [W, k], merged cache
+
+        self.draft_ingest = draft_ingest
+        self.draft_round = draft_round
 
 
 class _DenseExec:
@@ -539,6 +658,21 @@ class _PagedExec:
                 )
 
             self.chunk_pages = chunk_pages
+        self.verify_fn = None
+        if server._spec is not None:
+
+            @partial(jax.jit, donate_argnums=(2,))
+            def verify_fn(params, inp, pools, offs, valids, bt):
+                # inp: [W, k+1] — lane w holds [gen[-1], d_1..d_k] (stage
+                # 0) or the upstream verify hidden (mid stages); one
+                # chunk-shaped call verifies all k+1 positions, bit-exact
+                # against sequential paged decode (no new kernel).
+                _count_trace("verify_paged", g, inp.shape[0], inp.shape[1])
+                return model_g.verify_step_paged(
+                    params, inp, pools, offs, valids, bt
+                )
+
+            self.verify_fn = verify_fn
 
     def init_cache(self):
         """Shared page pool: [n_layers, P+1, page, KV, Dh] (page index P
@@ -730,6 +864,69 @@ class _PagedExec:
             for i, m in jobs:
                 outputs[i] = ("hidden", out[m.slot_ids[g]], 0)
 
+    def run_verify(self, r, jobs, outputs, mgr: PagedKVCache, readbacks, tok_dev):
+        """jobs: [(out_idx, member, seq, pos, valid)] — ONE fixed-shape
+        verify chunk covers every speculating lane's ``valid`` = k+1 (or
+        fewer, near completion) positions. Stage 0 consumes the on-device
+        token assembly built by the engine's draft runner; mid stages
+        consume the upstream verify hidden. The host length mirror
+        advances optimistically by ``valid`` — the accept finalizer (or
+        an abort's ``rewind_spec``) rolls the rejected tail back."""
+        s, g = self.server, self.g
+        _, params_g = s.stages[g]
+        C = s._spec.k + 1
+        W = s.max_batch
+        cache = s._caches[(g, r)]
+        last = g == s.G - 1
+        offs = np.full((W,), -1, np.int32)  # -1 = masked lane
+        valids = np.zeros((W,), np.int32)
+        for _, m, _, pos, valid in jobs:
+            slot = m.slot_ids[g]
+            offs[slot] = pos
+            valids[slot] = valid
+        if g == 0:
+            inp = tok_dev  # [W, C], assembled on device from the drafts
+        else:
+            slots = np.asarray([m.slot_ids[g] for _, m, _, _, _ in jobs], np.int32)
+            hs = jnp.stack(
+                [_pad_tail(seq, C)[0] for _, _, seq, _, _ in jobs]
+            )  # [N, C, D]
+            inp = (
+                jnp.zeros((W, C, s.cfg.d_model), hs.dtype)
+                .at[jnp.asarray(slots)]
+                .set(hs)
+            )
+        out, cache = self.verify_fn(
+            params_g, inp, cache,
+            jnp.asarray(offs), jnp.asarray(valids), mgr.device_block_table(),
+        )
+        s._caches[(g, r)] = cache
+        s.stats.verify_calls += 1
+        for _, m, _, pos, valid in jobs:
+            mgr.lengths[m.slot_ids[g]] = pos + valid
+            if m.spec_adv is None:
+                m.spec_adv = [0] * s.G
+            m.spec_adv[g] = valid
+        if last:
+            entries = [(i, m, m.slot_ids[g], valid) for i, m, _, _, valid in jobs]
+
+            def fin(toks, entries=entries):
+                for i, m, slot, v in entries:
+                    # Greedy accept: row j predicts the token after input
+                    # j, so drafts[a] is accepted while it matches row
+                    # a's argmax; row a then donates the bonus token.
+                    tgt = [int(toks[slot, j]) for j in range(v)]
+                    drafts = m.spec_drafts or []
+                    a = 0
+                    while a < v - 1 and drafts[a] == tgt[a]:
+                        a += 1
+                    outputs[i] = ("spec_done", tgt[: a + 1], v)
+
+            readbacks.append((jnp.argmax(out, axis=-1), fin))
+        else:
+            for i, m, _, _, valid in jobs:
+                outputs[i] = ("spec_hidden", out[m.slot_ids[g], :valid][None], valid)
+
 
 class PipelineServer:
     def __init__(
@@ -753,6 +950,8 @@ class PipelineServer:
         prefill_chunk: int | None = None,
         max_park_steps: int | None = 32,
         async_depth: int = 2,
+        spec_draft: tuple[Model, Any] | None = None,
+        spec_k: int = 4,
         seed: int = 0,
     ):
         self.cfg = model.cfg
@@ -794,6 +993,40 @@ class PipelineServer:
                 raise ValueError(
                     f"{model.cfg.name}: chunked prefill needs uniform full "
                     "attention (see repro.models.transformer.supports_paged)"
+                )
+        # Speculative draft-verify decoding: a (draft Model, draft params)
+        # pair turns every decode round into k draft steps (one scanned
+        # dispatch on the stage-0 replica) plus ONE k+1-wide verify chunk
+        # on the target. Paged substrate only: the paged chunk and decode
+        # paths share one attention reduction order, so greedy accept is
+        # bit-for-bit against plain decode — the dense chunk path is not.
+        self._spec = None
+        if spec_draft is not None:
+            if not paged:
+                raise ValueError(
+                    "speculative decoding runs on the paged substrate only "
+                    "(the dense chunk path is not bit-exact vs decode)"
+                )
+            if spec_k < 1:
+                raise ValueError("spec_k must be >= 1")
+            draft_model, draft_params = spec_draft
+            if any(m.verify_step_paged is None for m, _ in self.stages):
+                raise ValueError(
+                    f"{model.cfg.name}: speculative verify needs uniform full "
+                    "attention (see repro.models.transformer.supports_paged)"
+                )
+            if (
+                draft_model.prefill_chunk_batch is None
+                or draft_model.decode_batch is None
+            ):
+                raise ValueError(
+                    f"{draft_model.cfg.name}: a draft model needs chunked "
+                    "prefill + batched decode (uniform full attention)"
+                )
+            if draft_model.cfg.vocab_size != model.cfg.vocab_size:
+                raise ValueError(
+                    "draft and target must share a vocabulary: "
+                    f"{draft_model.cfg.vocab_size} vs {model.cfg.vocab_size}"
                 )
         if async_depth < 0:
             raise ValueError("async_depth must be >= 0 (0 = legacy sync)")
@@ -848,6 +1081,10 @@ class PipelineServer:
             max_queue=max_queue,
             max_park_steps=max_park_steps,
         )
+        if spec_draft is not None:
+            # Built before _exec: the paged backend compiles its verify
+            # entry point only when speculation is on.
+            self._spec = _SpecState(self, spec_draft[0], spec_draft[1], spec_k)
         self._exec = [
             (_PagedExec if paged else _DenseExec)(self, g) for g in range(n_groups)
         ]
@@ -907,6 +1144,95 @@ class PipelineServer:
         h = req.hidden
         return h[:, None] if h.ndim == 2 else h
 
+    def _run_draft(self, r: int, jobs, readbacks):
+        """Draft work for a stage-0 verify call: catch each lane's draft
+        cache up to the committed stream (usually just the previous
+        round's accepted tail), then scan ``k`` greedy draft steps in ONE
+        dispatch, chaining the argmax on device. Returns the [W, k+1]
+        on-device verify input — lane w = [gen[-1], d_1..d_k] — with no
+        host sync in the dispatch phase; the drafts' host copies ride the
+        call's deferred readbacks (needed only by the accept finalizer).
+        """
+        spec = self._spec
+        k = spec.k
+        C = k + 1
+        W = self.max_batch
+        cache = spec.caches[r]
+        tok0 = np.zeros((W,), np.int32)
+        entries = []  # [member, slot, ctx, draft_len, L] — lanes that draft
+        dr_entries = []
+        for _, m, _, pos, valid in jobs:
+            slot = m.slot_ids[0]
+            ctx = np.concatenate(
+                [np.asarray(m.prompt, np.int64), np.asarray(m.generated, np.int64)]
+            )
+            L = len(ctx) - 1  # committed rows; ctx[L] = the round's true input
+            tok0[slot] = ctx[L]
+            if valid < 2:
+                continue  # request's last token: nothing to draft
+            if spec.rid[r][slot] != m.rid:
+                # First round on this lane (or the lane was reused): the
+                # draft knows nothing of the stream — rebuild from 0.
+                spec.rid[r][slot] = m.rid
+                spec.lens[r][slot] = 0
+            entries.append([m, slot, ctx, int(spec.lens[r][slot]), L])
+            dr_entries.append((m, slot, valid - 1))
+        if not entries:
+            drafts = jnp.zeros((W, k), jnp.int32)
+        else:
+            # Catch-up: a rebuilt lane may be arbitrarily far behind; feed
+            # fixed C-wide chunks until one round's ingest suffices.
+            while any(e[4] - e[3] > C for e in entries):
+                offs = np.zeros((W,), np.int32)
+                valids = np.zeros((W,), np.int32)
+                mask = np.zeros((W,), bool)
+                buf = np.zeros((W, 1, C), np.int32)
+                for e in entries:
+                    _, slot, ctx, dl, L = e
+                    if L - dl > C:
+                        mask[slot] = True
+                        offs[slot] = dl
+                        valids[slot] = C
+                        buf[slot, 0, :] = ctx[dl : dl + C]
+                        e[3] = dl + C
+                cache = spec.draft_ingest(
+                    spec.params, jnp.asarray(buf), cache,
+                    jnp.asarray(offs), jnp.asarray(valids), jnp.asarray(mask),
+                )
+                self.stats.draft_calls += 1
+            offs = np.zeros((W,), np.int32)
+            valids = np.zeros((W,), np.int32)
+            mask = np.zeros((W,), bool)
+            buf = np.zeros((W, 1, C), np.int32)
+            for _, slot, ctx, dl, L in entries:
+                mask[slot] = True
+                gap = L - dl
+                if gap > 0:
+                    offs[slot] = dl
+                    valids[slot] = gap
+                    buf[slot, 0, :gap] = ctx[dl:L]
+                else:
+                    # Caught up (an abandoned round can even leave the
+                    # draft one speculative row ahead): ingest nothing,
+                    # just pin the draft context length back to L.
+                    offs[slot] = L
+                    valids[slot] = 0
+                spec.lens[r][slot] = L + 1  # the scan writes ctx[L]'s row
+            drafts, cache = spec.draft_round(
+                spec.params, jnp.asarray(buf), cache,
+                jnp.asarray(offs), jnp.asarray(valids),
+                jnp.asarray(tok0), jnp.asarray(mask),
+            )
+            self.stats.draft_calls += 1
+
+            def fin(d, dr=dr_entries):
+                for m, slot, ke in dr:
+                    m.spec_drafts = [int(x) for x in d[slot, :ke]]
+
+            readbacks.append((drafts, fin))
+        spec.caches[r] = cache
+        return jnp.concatenate([jnp.asarray(tok0)[:, None], drafts], axis=1)
+
     def _start_call(self, g: int, r: int, members: list[Request]) -> _StageCall | None:
         """Issue the batched JAX work for every member and open the call.
 
@@ -928,10 +1254,26 @@ class PipelineServer:
         # younger members — skip those when reached (queued/dropped flips).
         plan: dict[int, tuple] = {}
         need: dict[int, int] = {}
+        spec = self._spec
         for m in members:
             if m.cache_ready[g]:
-                plan[m.rid] = ("decode",)
-                need[m.rid] = int(mgr.lengths[m.slot_ids[g]]) + 1
+                # Speculative rounds start at stage 0; a mid stage joins
+                # one only while the round is live (spec_adv[0] set by the
+                # stage-0 verify dispatch) — after a mid-round failover
+                # re-prefill the handoff is a plain prefix and downstream
+                # stages fall back to plain decode for the pass.
+                if spec is not None and (
+                    g == 0 or (m.spec_adv is not None and m.spec_adv[0] > 0)
+                ):
+                    if g == 0:
+                        v = min(spec.k + 1, m.n_tokens - len(m.generated))
+                    else:
+                        v = m.spec_adv[0]
+                    plan[m.rid] = ("spec", v)
+                    need[m.rid] = int(mgr.lengths[m.slot_ids[g]]) + v
+                else:
+                    plan[m.rid] = ("decode",)
+                    need[m.rid] = int(mgr.lengths[m.slot_ids[g]]) + 1
             else:
                 if chunk is not None:
                     # Cache the assembled stage input across chunk steps
@@ -962,11 +1304,16 @@ class PipelineServer:
             return None
 
         outputs: list[tuple] = [None] * len(served)
-        whole_jobs, chunk_jobs, decode_jobs = [], [], []
+        whole_jobs, chunk_jobs, decode_jobs, spec_jobs = [], [], [], []
         for i, m in enumerate(served):
             item = plan[m.rid]
             if item[0] == "decode":
                 decode_jobs.append((i, m))
+            elif item[0] == "spec":
+                seq = None if g == 0 else m.hidden
+                spec_jobs.append(
+                    (i, m, seq, int(mgr.lengths[m.slot_ids[g]]), item[1])
+                )
             elif item[0] == "chunk":
                 chunk_jobs.append((i, m, item[1], item[2], item[3]))
             else:
@@ -978,6 +1325,12 @@ class PipelineServer:
             ex.run_prefill_whole(r, whole_jobs, outputs, mgr, readbacks)
         if chunk_jobs:
             ex.run_chunks(r, chunk_jobs, outputs, mgr, readbacks)
+        if spec_jobs:
+            # Stage 0 drafts first (its readback precedes the verify's in
+            # the call's drain order — the accept finalizer needs the
+            # round's drafts already patched in).
+            tok_dev = self._run_draft(r, spec_jobs, readbacks) if g == 0 else None
+            ex.run_verify(r, spec_jobs, outputs, mgr, readbacks, tok_dev)
         if decode_jobs:
             ex.run_decode(r, decode_jobs, outputs, mgr, readbacks)
 
@@ -1029,6 +1382,7 @@ class PipelineServer:
             req.t_first_token = t_ready if t_ready is not None else time.perf_counter()
             req.slot_first_token = ready_slot
         self.stats.tokens_generated += 1
+        self.stats.accepted_tokens += 1
 
     def _commit(
         self,
@@ -1041,6 +1395,23 @@ class PipelineServer:
         """Apply a completed stage call's result to the request."""
         req.in_call = False
         kind, value, advance = out
+        if kind == "spec_hidden":
+            # Mid-stage verify handoff: the [1, v, D] hidden feeds the
+            # next stage's verify; the round stays in flight.
+            req.cache_ready[g] = True
+            req.hidden = value
+            self._advance(req)
+            return
+        if kind == "spec_done":
+            req.cache_ready[g] = True
+            self._finish_spec_round(req, value, advance, t_ready, ready_slot)
+            self._advance(req)
+            return
+        if req.spec_adv is not None and any(req.spec_adv):
+            # A plain-path result landing mid-round means the round was
+            # broken (a mid-pipeline failover re-prefill replaced it):
+            # rewind the optimistic rows before committing plain state.
+            self.scheduler.rewind_spec(req)
         if kind == "chunk_part":
             # Prefill continues at this stage next step; mid-pipeline
             # chunks accumulate for the downstream handoff.
@@ -1068,6 +1439,39 @@ class PipelineServer:
         else:
             req.hidden = value
         self._advance(req)
+
+    def _finish_spec_round(self, req, emit, v, t_ready, ready_slot) -> None:
+        """Commit a speculative round: accept the emitted prefix, rewind
+        every stage's rejected tail, validate the draft mirror's accepted
+        rows, update acceptance stats, and stream the tokens."""
+        e = len(emit)
+        self.stats.spec_rounds += 1
+        self.stats.spec_proposed += v - 1
+        self.stats.spec_accepted += e - 1
+        for g in range(self.G):
+            adv = req.spec_adv[g] if req.spec_adv is not None else 0
+            if req.spec_adv is not None:
+                req.spec_adv[g] = 0
+            if not adv:
+                continue
+            slot = req.slot_ids[g] if req.slot_ids is not None else None
+            if slot is None or req.replicas is None:
+                continue
+            mgr = self.managers[(g, req.replicas[g])]
+            if mgr.slots[slot] == req.rid:
+                mgr.rollback(req.rid, slot, adv - e)
+        spec = self._spec
+        if req.spec_drafts is not None and req.slot_ids is not None:
+            # Draft rows are valid through the accepted prefix: the scan
+            # wrote rows for [gen[-1], d_1..d_{k-1}] and d_j == t_j for
+            # j < e, so next round's ingest starts after them.
+            r0, slot0 = req.replicas[0], req.slot_ids[0]
+            L = len(req.prompt) + len(req.generated) - 1
+            if slot0 is not None and spec.rid[r0][slot0] == req.rid:
+                spec.lens[r0][slot0] = L + min(e, spec.k)
+        req.spec_drafts = None
+        for t in emit:
+            self._emit_token(req, t, t_ready, ready_slot)
 
     def _advance(self, req: Request) -> None:
         req.stage += 1
@@ -1146,6 +1550,10 @@ class PipelineServer:
             for call in ring:
                 mode = self.pm_policy.mode(call.pm)
                 b.charge(mode.ce / mode.kappa)
+                # Energy is charged per *call* (a speculative verify costs
+                # one call no matter how many tokens it commits) — the
+                # per-accepted-token figure divides this by accepted_tokens.
+                self.stats.energy_charged += mode.ce / mode.kappa
                 call.slots_left -= 1
                 if call.slots_left <= 0 and call.t_ready is None:
                     call.t_ready = time.perf_counter()

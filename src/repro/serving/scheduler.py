@@ -67,6 +67,14 @@ class Request:
     chunk_seq: Any = None  # cached stage input for the in-progress prefill
     generated: list[int] = dataclasses.field(default_factory=list)
     hidden: Any = None  # inter-stage activation
+    # Speculative decoding round state (engine-managed). ``spec_drafts``
+    # holds the host copies of the round's draft tokens once the stage-0
+    # call commits; ``spec_adv[g]`` counts the KV rows stage ``g``
+    # optimistically wrote for the round still in flight (rewound by the
+    # accept finalizer, or by :meth:`StepScheduler.rewind_spec` when the
+    # round aborts before its final-stage commit).
+    spec_drafts: list[int] | None = None
+    spec_adv: list[int] | None = None
     in_call: bool = False  # member of the current stage call
     park_steps: int = 0  # consecutive slots parked slotless (aging)
     queued: bool = False  # waiting for admission (backpressure)
@@ -275,6 +283,33 @@ class StepScheduler:
             ):
                 req.park_steps = 0
 
+    def rewind_spec(self, req: Request) -> None:
+        """Abort an in-flight speculative round: rewind every stage's
+        optimistic KV advance back to the committed stream.
+
+        A stage that already committed its verify this round keeps ONE
+        row — the KV of ``generated[-1]``, the round's first (true)
+        input, exactly the row a plain decode round would have left
+        behind — so an abandoned round degrades to plain-decode state.
+        The current stage (dispatched but never committed) rewinds
+        fully; the round's drafts are discarded. No-op outside a round.
+        """
+        if req.spec_adv is None:
+            return
+        for g in range(self.G):
+            n = req.spec_adv[g]
+            req.spec_adv[g] = 0
+            if not n:
+                continue
+            keep = 1 if g < req.stage else 0
+            slot = req.slot_ids[g] if req.slot_ids is not None else None
+            if slot is None or req.replicas is None:
+                continue
+            mgr = self.managers[(g, req.replicas[g])]
+            if mgr.slots[slot] == req.rid:
+                mgr.rollback(req.rid, slot, n - keep)
+        req.spec_drafts = None
+
     def reroute_or_drop(self, req: Request) -> None:
         """Failure handling: shift the in-flight stage to a sibling.
 
@@ -283,7 +318,10 @@ class StepScheduler:
         sibling re-prefills. Stage 0 reconstructs its full context from
         the immutable prompt + generated tokens; deeper stages restart
         from the latest hidden handoff (documented context loss under
-        failure)."""
+        failure). An in-flight speculative round is rewound first
+        (:meth:`rewind_spec`) — its uncommitted draft rows must not
+        survive as phantom context on the stages that stay placed."""
+        self.rewind_spec(req)
         g = req.stage
         self.managers[(g, req.replicas[g])].release(req.rid, req.slot_ids[g])
         req.slot_ids[g] = None
@@ -401,6 +439,11 @@ class StepScheduler:
         victim.chunk_outs = []
         victim.chunk_seq = None
         victim.park_steps = 0
+        # A preempted mid-round speculative request starts over: every
+        # slot and page was just released (lengths zeroed with them), so
+        # no rollback is needed — just forget the round.
+        victim.spec_drafts = None
+        victim.spec_adv = None
         victim.queued = True
         self.pending.append(victim)
         self.stats.preempted_jobs += 1

@@ -4,9 +4,24 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import pytest
 
 from repro.configs import get_smoke_config
 from repro.models import build_model, init_from_template
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _release_compiled_executables():
+    """Drop XLA's compiled-executable caches after every test module.
+
+    The CPU JIT keeps ~3-4 mmap regions live per compiled executable for
+    the life of the process; the full tier-1 suite compiles enough
+    distinct shapes that a single pytest process crosses the kernel's
+    default ``vm.max_map_count`` (65530) and XLA segfaults mid-compile.
+    Within-module sharing is untouched — only cross-module reuse (a few
+    conftest helpers) recompiles."""
+    yield
+    jax.clear_caches()
 
 
 def tiny_model(name="stablelm-1.6b"):
