@@ -1,0 +1,294 @@
+"""Mesh-sharded serving benchmark: tensor-parallel stage width sweep.
+
+For each model-axis width w in {1, 2, 4, 8} (forced-host CPU devices:
+``--xla_force_host_platform_device_count=8``), drain the same
+continuous-batching workload through ``PipelineServer(mesh=...)`` —
+params sharded per stage with ``SERVE_RULES``, KV state committed to
+per-replica submeshes, one jitted dispatch per stage lowering to
+collectives — and record
+
+* end-to-end tokens/s and wall time;
+* the mean/median inter-stage dispatch gap (``dispatch_log`` deltas
+  within a step — the seam the async ring keeps sync-free);
+* token-exactness against the single-device engine (dense AND paged
+  substrates — widths must be bit-for-bit, not approximately equal);
+* the number of collective ops in the compiled stage-0 decode HLO
+  (0 at width 1; > 0 is the proof the dispatch actually lowered to
+  cross-device communication).
+
+One more record covers the multi-process engine: a 2x2 grid of real
+worker processes, one SIGKILLed mid-stream — the drained token streams
+must still match the single-device reference exactly (loss-free
+re-prefill failover), and the router must have observed the membership
+leave.
+
+Forced-host widths share the same silicon, so tokens/s across widths is
+reported, not asserted — the structural claims are exactness and the
+collective count. If the current process has too few devices the sweep
+re-execs itself in a subprocess with the forced-device flag set, so
+``benchmarks.run`` works from any parent environment.
+
+Results land in ``BENCH_mesh.json`` via the shared envelope.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import re
+import subprocess
+import sys
+import time
+
+import numpy as np
+
+from .common import csv_row, smoke_serving_model, write_bench
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_mesh.json"
+WIDTHS = (1, 2, 4, 8)
+N_DEVICES = 8
+
+_COLLECTIVES = re.compile(
+    r"\b(all-reduce|all-gather|reduce-scatter|collective-permute)\b"
+)
+
+
+def _count_collectives(jitted, *args) -> int:
+    """Collective ops in the compiled HLO of one jitted dispatch."""
+    text = jitted.lower(*args).compile().as_text()
+    return len(_COLLECTIVES.findall(text))
+
+
+def _workload(cfg, smoke: bool):
+    rng = np.random.default_rng(0)
+    n_req, n_tok = (6, 6) if smoke else (12, 12)
+    lens = rng.integers(4, 12, size=n_req)
+    prompts = [rng.integers(0, cfg.vocab_size, size=int(n)) for n in lens]
+    return prompts, n_tok
+
+
+def _drain(server, reqs, gaps: list[float] | None = None, limit: int = 20_000):
+    steps = 0
+    while not all(r.done or r.dropped for r in reqs):
+        mark = len(server.dispatch_log)
+        server.step()
+        if gaps is not None:
+            ts = [t for _, _, t in server.dispatch_log[mark:]]
+            gaps.extend(np.diff(ts))
+        steps += 1
+        if steps > limit:  # pragma: no cover
+            raise RuntimeError("mesh bench did not drain")
+    return [list(r.generated) for r in reqs]
+
+
+def _measure(width: int, paged: bool, smoke: bool, reference) -> dict:
+    """One (width, substrate) cell: drain, compare, count collectives."""
+    from repro.launch.mesh import make_serving_mesh
+    from repro.serving import PipelineServer
+
+    cfg, model, params = smoke_serving_model()
+    prompts, n_tok = _workload(cfg, smoke)
+    mesh = None if width == 1 else make_serving_mesh(model_axis=width)
+    server = PipelineServer(
+        model,
+        params,
+        mesh=mesh,
+        n_groups=2,
+        n_replicas=2,
+        policy="uniform",
+        harvest_bounds=(60.0, 80.0),  # energy-unconstrained: pure compute
+        max_len=64,
+        max_batch=4,
+        paged=paged,
+        page_size=8,
+        seed=3,
+    )
+    reqs = [server.submit(p, n_tokens=n_tok) for p in prompts]
+    # Warm the compile caches so tokens/s measures steady-state dispatch.
+    for _ in range(4):
+        server.step()
+    warm = server.stats.accepted_tokens
+    gaps: list[float] = []
+    t0 = time.perf_counter()
+    toks = _drain(server, reqs, gaps)
+    dt = time.perf_counter() - t0
+    tokens = server.stats.accepted_tokens - warm
+    gaps_us = np.asarray(gaps) * 1e6
+    ncoll = None
+    if not paged:
+        # Stage-0 decode is the steady-state dispatch: re-lower it with
+        # the live (placed) arguments and count collectives in the HLO.
+        ex = server._exec[0]
+        W = server.max_batch
+        import jax.numpy as jnp
+
+        inp = server._place(0, jnp.zeros((W, 1, 1), jnp.int32))
+        mask = server._place(0, jnp.ones((W,), bool))
+        ncoll = _count_collectives(
+            ex.decode_masked,
+            server._params_for(0, 0),
+            inp,
+            server._caches[(0, 0)],
+            mask,
+        )
+    out = {
+        "tokens_per_s": round(tokens / dt, 1),
+        "wall_s": round(dt, 3),
+        "tokens": tokens,
+        "mean_dispatch_gap_us": round(float(gaps_us.mean()), 1) if len(gaps_us) else 0.0,
+        "p50_dispatch_gap_us": round(float(np.median(gaps_us)), 1) if len(gaps_us) else 0.0,
+        "token_exact_vs_single_device": int(toks == reference),
+    }
+    if ncoll is not None:
+        out["decode_collectives"] = ncoll
+    return out, toks
+
+
+def _measure_mp(smoke: bool, reference) -> dict:
+    """Multi-process cell: real workers, one killed mid-stream."""
+    from repro.serving.mpserve import MPPipelineServer
+
+    cfg, _, _ = smoke_serving_model()
+    prompts, n_tok = _workload(cfg, smoke)
+    spec = {
+        "arch": "stablelm-1.6b",
+        "smoke": True,
+        "overrides": {"dtype": "float32", "param_dtype": "float32"},
+        "seed": 0,
+    }
+    server = MPPipelineServer(
+        spec,
+        n_groups=2,
+        n_replicas=2,
+        policy="uniform",
+        harvest_bounds=(60.0, 80.0),
+        max_len=64,
+        max_batch=4,
+        seed=3,
+    )
+    try:
+        reqs = [server.submit(p, n_tokens=n_tok) for p in prompts]
+        v0 = server.router.membership_version
+        for _ in range(4):
+            server.step()
+        # Kill the real OS process behind (0, 0); the ProcessMonitor
+        # turns the exit into a membership leave on the next step.
+        proc = server._workers[(0, 0)].proc
+        proc.kill()
+        proc.wait()
+        t0 = time.perf_counter()
+        toks = _drain(server, reqs)
+        dt = time.perf_counter() - t0
+        return {
+            "token_exact_after_kill": int(toks == reference),
+            "membership_events": server.router.membership_version - v0,
+            "rerouted_stages": server.stats.rerouted_stages,
+            "tokens": server.stats.tokens_generated,
+            "wall_s": round(dt, 3),
+        }
+    finally:
+        server.close()
+
+
+def _sweep(smoke: bool) -> dict:
+    import jax
+
+    n_dev = jax.device_count()
+    widths = [w for w in WIDTHS if w <= n_dev]
+    cfg, model, params = smoke_serving_model()
+    report: dict = {"smoke": smoke, "n_devices": n_dev, "widths": {}}
+    refs = {}
+    for paged in (False, True):
+        # width-1, no mesh: the single-device reference stream
+        cell, refs[paged] = _measure(1, paged, smoke, None)
+        cell["token_exact_vs_single_device"] = 1
+        report["widths"].setdefault("1", {})["paged" if paged else "dense"] = cell
+    for w in widths[1:]:
+        for paged in (False, True):
+            cell, _ = _measure(w, paged, smoke, refs[paged])
+            report["widths"].setdefault(str(w), {})[
+                "paged" if paged else "dense"
+            ] = cell
+    report["mp_failover"] = _measure_mp(smoke, refs[False])
+    return report
+
+
+def _reexec_forced(smoke: bool) -> dict:
+    """Run the sweep in a subprocess with 8 forced-host devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={N_DEVICES}"
+    root = pathlib.Path(__file__).resolve().parent.parent
+    env["PYTHONPATH"] = (
+        str(root / "src") + os.pathsep + str(root)
+        + os.pathsep + env.get("PYTHONPATH", "")
+    )
+    cmd = [sys.executable, "-m", "benchmarks.mesh_bench", "--emit-json"]
+    if smoke:
+        cmd.append("--smoke")
+    out = subprocess.run(
+        cmd, cwd=root, env=env, capture_output=True, text=True, check=True
+    )
+    return json.loads(out.stdout)
+
+
+def _rows(report: dict) -> list[str]:
+    rows = []
+    for w in sorted(report["widths"], key=int):
+        for sub in ("dense", "paged"):
+            cell = report["widths"][w].get(sub)
+            if cell is None:
+                continue
+            extras = (
+                f"tokens_per_s={cell['tokens_per_s']} "
+                f"exact={cell['token_exact_vs_single_device']}"
+            )
+            if "decode_collectives" in cell:
+                extras += f" collectives={cell['decode_collectives']}"
+            rows.append(
+                csv_row(f"mesh/{sub}_w{w}", cell["mean_dispatch_gap_us"], extras)
+            )
+    mp = report["mp_failover"]
+    rows.append(
+        csv_row(
+            "mesh/mp_kill_failover",
+            0.0,
+            f"exact={mp['token_exact_after_kill']} "
+            f"membership_events={mp['membership_events']} "
+            f"rerouted={mp['rerouted_stages']}",
+        )
+    )
+    return rows
+
+
+def run(smoke: bool = False) -> list[str]:
+    import jax
+
+    if jax.device_count() >= N_DEVICES:
+        report = _sweep(smoke)
+    else:
+        report = _reexec_forced(smoke)
+    write_bench(BENCH_JSON, "mesh_bench", report)
+    return _rows(report)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument(
+        "--emit-json",
+        action="store_true",
+        help="print the report JSON to stdout instead of writing "
+        "BENCH_mesh.json (internal: the forced-device re-exec child)",
+    )
+    args = ap.parse_args()
+    if args.emit_json:
+        print(json.dumps(_sweep(args.smoke)))
+        return
+    for row in run(smoke=args.smoke):
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

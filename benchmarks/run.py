@@ -16,11 +16,17 @@ Prints ``name,us_per_call,derived`` CSV rows:
   spec   — speculative draft-verify vs plain paged decode: accepted
             tokens/s + energy per accepted token (BENCH_spec.json)
   sweep  — per-scenario re-jit vs one vmapped sweep (writes BENCH_sweep.json)
+  mesh   — tensor-parallel stage width sweep on forced-host devices:
+            exactness, dispatch gaps, collectives, multi-process
+            kill-failover (BENCH_mesh.json)
   roofline — per-cell dry-run roofline terms (deliverable g)
 
 ``--summary`` skips the benchmarks and prints the perf trajectory
 recorded across every ``BENCH_*.json`` at the repo root (all share the
 ``{name, commit, metrics{}}`` envelope from :mod:`benchmarks.common`).
+``--summary --json`` emits the same trajectory as one consolidated,
+schema-validated JSON document on stdout — CI uploads it as the
+``perf-trajectory`` artifact.
 """
 
 from __future__ import annotations
@@ -44,15 +50,47 @@ def _flat_metrics(metrics, prefix="", out=None):
     return out
 
 
-def summary() -> None:
-    """Print the recorded perf trajectory across all BENCH_*.json files."""
+def collect_records() -> list[dict]:
+    """Load + schema-validate every BENCH_*.json at the repo root."""
+    from .common import BENCH_SCHEMA_KEYS
+
     root = pathlib.Path(__file__).resolve().parent.parent
-    paths = sorted(root.glob("BENCH_*.json"))
-    if not paths:
+    records = []
+    for path in sorted(root.glob("BENCH_*.json")):
+        data = json.loads(path.read_text())
+        missing = [k for k in BENCH_SCHEMA_KEYS if k not in data]
+        if missing:
+            raise SystemExit(f"{path.name}: missing envelope keys {missing}")
+        if not isinstance(data["metrics"], dict):
+            raise SystemExit(f"{path.name}: metrics must be an object")
+        data["file"] = path.name
+        records.append(data)
+    return records
+
+
+def summary(as_json: bool = False) -> None:
+    """Print the recorded perf trajectory across all BENCH_*.json files."""
+    records = collect_records()
+    if not records:
         print("no BENCH_*.json records found", file=sys.stderr)
         return
-    for path in paths:
-        data = json.loads(path.read_text())
+    if as_json:
+        doc = {
+            "schema": "repro-perf-trajectory/v1",
+            "records": [
+                {
+                    "name": d["name"],
+                    "commit": d["commit"],
+                    "file": d["file"],
+                    "metrics": _flat_metrics(d["metrics"]),
+                }
+                for d in records
+            ],
+        }
+        print(json.dumps(doc, indent=2))
+        return
+    for data in records:
+        path = pathlib.Path(data["file"])
         print(f"{data['name']} @ {data['commit']} ({path.name})")
         flat = _flat_metrics(data["metrics"])
         # Headline ratios/speedups first, then the rest, alphabetical.
@@ -74,10 +112,17 @@ def main() -> None:
         help="print the perf trajectory across existing BENCH_*.json "
              "records instead of running the benchmarks",
     )
+    ap.add_argument(
+        "--json", action="store_true",
+        help="with --summary: one consolidated schema-validated JSON "
+             "document on stdout (the CI perf-trajectory artifact)",
+    )
     args = ap.parse_args()
     if args.summary:
-        summary()
+        summary(as_json=args.json)
         return
+    if args.json:
+        ap.error("--json requires --summary")
 
     from . import (
         async_bench,
@@ -86,6 +131,7 @@ def main() -> None:
         fig2b,
         fig3,
         fig4,
+        mesh_bench,
         paged_bench,
         quant_kv_bench,
         roofline_table,
@@ -108,6 +154,7 @@ def main() -> None:
         quant_kv_bench,
         spec_bench,
         sweep_bench,
+        mesh_bench,
         roofline_table,
     ):
         try:

@@ -23,7 +23,7 @@ from repro.roofline import analysis as A
 
 cfg = dataclasses.replace(get_config("qwen2.5-14b"), remat=False)
 cell = SHAPES["decode_32k"]
-mesh = make_production_mesh()
+mesh = make_production_mesh(shape=(16, 16))
 model = build_model(cfg)
 abstract = abstract_params(model.template, cfg.param_dtype)
 p_sh = param_shardings(model.template, mesh, DECODE_RULES)

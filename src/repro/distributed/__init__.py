@@ -14,6 +14,8 @@ from .sharding import (
     logical_sharding,
     mesh_axes,
     param_shardings,
+    replica_submeshes,
+    serve_cache_spec,
     use_mesh_rules,
 )
 
@@ -31,5 +33,7 @@ __all__ = [
     "logical_sharding",
     "mesh_axes",
     "param_shardings",
+    "replica_submeshes",
+    "serve_cache_spec",
     "use_mesh_rules",
 ]

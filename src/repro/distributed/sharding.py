@@ -97,14 +97,24 @@ TRAIN_RULES_SEQ: AxisRules = {
     "embed_fsdp": ("data", "model"),
 }
 
+# Serving engine (PipelineServer on a real mesh): params TP over model
+# and fully replicated over (pod, data) — every data replica owns a
+# complete stage copy and serves its own requests, which is the replica
+# set the paper's Router schedules over. KV caches and paged pools shard
+# only on cache_batch (see :func:`serve_cache_spec`) so one replica's
+# cache never straddles a replica boundary and failover stays local.
+SERVE_RULES: AxisRules = {
+    **DEFAULT_RULES,
+    "embed_fsdp": None,
+}
+
 RULE_SETS = {
     "train": TRAIN_RULES,
     "train_seq": TRAIN_RULES_SEQ,
     "prefill": PREFILL_RULES,
     "decode": DECODE_RULES,
+    "serve": SERVE_RULES,
 }
-
-SERVE_RULES: AxisRules = PREFILL_RULES  # back-compat alias
 
 
 class _Ctx(threading.local):
@@ -200,6 +210,56 @@ def divisible_spec(
         if i >= len(shape) or shape[i] % size != 0:
             spec[i] = None
     return P(*spec)
+
+
+def serve_cache_spec(
+    shape: Sequence[int],
+    axes: Sequence[str | None],
+    mesh: Mesh,
+    rules: AxisRules = SERVE_RULES,
+) -> P:
+    """PartitionSpec for a KV cache / paged-pool leaf under serving.
+
+    Cache leaves shard ONLY on their ``cache_batch`` dim: every other
+    logical axis is masked to replication before resolving, regardless
+    of what ``rules`` would map it to. On a mesh without a rule target
+    for ``cache_batch`` (e.g. a model-only submesh) the whole leaf is
+    replicated — a replica's cache lives entirely inside its own
+    tensor-parallel device set.
+    """
+    masked = tuple(a if a == "cache_batch" else None for a in axes)
+    return divisible_spec(shape, masked, mesh, rules)
+
+
+def replica_submeshes(mesh: Mesh, n_replicas: int):
+    """Carve a serving mesh into per-data-slice tensor-parallel submeshes.
+
+    ``mesh`` must use only ``("data", "model")`` axes (either order;
+    ``model`` alone is accepted). Returns ``(slices, slice_of)`` where
+    ``slices[d]`` is a ``(1, model)``-shaped ``("data", "model")`` Mesh
+    over data-slice ``d``'s devices and ``slice_of[r]`` maps replica
+    ``r`` to its slice (round-robin when replicas outnumber slices).
+    Distinct slices are disjoint device sets — the "real replica sets"
+    the Router routes over; stage handoffs between them are
+    device-to-device transfers.
+    """
+    names = tuple(mesh.axis_names)
+    if "model" not in names or not set(names) <= {"data", "model"}:
+        raise ValueError(
+            "serving mesh must use only ('data', 'model') axes with "
+            f"'model' present, got {names!r} — build one with "
+            "launch.mesh.make_serving_mesh"
+        )
+    devs = np.asarray(mesh.devices)
+    if names == ("model",):
+        devs = devs.reshape(1, -1)
+    elif names == ("model", "data"):
+        devs = devs.T
+    slices = [
+        Mesh(devs[d : d + 1, :], ("data", "model")) for d in range(devs.shape[0])
+    ]
+    slice_of = [r % len(slices) for r in range(n_replicas)]
+    return slices, slice_of
 
 
 def param_shardings(template, mesh: Mesh, rules: AxisRules):

@@ -1,6 +1,6 @@
 from .checkpoint import latest_step, list_steps, restore_checkpoint, save_checkpoint
 from .elastic import ElasticController
-from .health import HeartbeatMonitor, HedgePolicy
+from .health import HeartbeatMonitor, HedgePolicy, ProcessMonitor
 
 __all__ = [
     "latest_step",
@@ -10,4 +10,5 @@ __all__ = [
     "ElasticController",
     "HeartbeatMonitor",
     "HedgePolicy",
+    "ProcessMonitor",
 ]

@@ -14,7 +14,7 @@ import dataclasses
 import time
 from collections import deque
 
-__all__ = ["HeartbeatMonitor", "HedgePolicy"]
+__all__ = ["HeartbeatMonitor", "ProcessMonitor", "HedgePolicy"]
 
 
 @dataclasses.dataclass
@@ -37,6 +37,51 @@ class HeartbeatMonitor:
         now = time.monotonic() if now is None else now
         t = self._last.get(replica_id)
         return t is not None and now - t <= self.timeout
+
+
+@dataclasses.dataclass
+class ProcessMonitor:
+    """Liveness of *real* worker processes (multi-process serving).
+
+    ``register`` a popen-like object (anything with ``.poll()``) per
+    replica key; ``poll`` returns keys whose process has exited since
+    the last sweep, each reported exactly once — the engine turns these
+    into ``fail_replica`` membership-leave events. Successful RPC
+    responses ``beat`` the embedded :class:`HeartbeatMonitor`, so a
+    hung-but-running worker (stale heartbeat) is detectable separately
+    from a dead one (process exit).
+    """
+
+    heartbeats: HeartbeatMonitor = dataclasses.field(
+        default_factory=lambda: HeartbeatMonitor(timeout=60.0)
+    )
+    _procs: dict = dataclasses.field(default_factory=dict)
+    _reported: set = dataclasses.field(default_factory=set)
+
+    def register(self, key, proc) -> None:
+        self._procs[key] = proc
+        self._reported.discard(key)
+        self.heartbeats.beat(key)
+
+    def forget(self, key) -> None:
+        self._procs.pop(key, None)
+        self._reported.discard(key)
+
+    def beat(self, key) -> None:
+        self.heartbeats.beat(key)
+
+    def alive(self, key) -> bool:
+        proc = self._procs.get(key)
+        return proc is not None and proc.poll() is None
+
+    def poll(self) -> list:
+        """Keys whose process has exited, newly dead since the last sweep."""
+        dead = []
+        for key, proc in self._procs.items():
+            if key not in self._reported and proc.poll() is not None:
+                dead.append(key)
+                self._reported.add(key)
+        return dead
 
 
 @dataclasses.dataclass

@@ -99,7 +99,11 @@ def lower_cell(
 ) -> dict:
     cfg = get_config(arch)
     cell = SHAPES[shape_name]
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    # Pin the classic pod layouts — the dry-run forces 512 host devices
+    # and its artifacts are calibrated to (16, 16) / (2, 16, 16).
+    mesh = make_production_mesh(
+        multi_pod=multi_pod, shape=(2, 16, 16) if multi_pod else (16, 16)
+    )
     chips = int(np.prod(list(mesh.shape.values())))
     t0 = time.time()
 

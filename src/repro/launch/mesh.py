@@ -1,25 +1,103 @@
-"""Production mesh construction.
+"""Production / serving mesh construction.
 
-A FUNCTION, not a module-level constant — importing this module never
+FUNCTIONS, not module-level constants — importing this module never
 touches jax device state (required for the dry-run's placeholder-device
 environment variable to take effect first).
 
-Meshes:
-  * single-pod: (data=16, model=16) — 256 chips (one v5e pod)
-  * multi-pod:  (pod=2, data=16, model=16) — 512 chips across 2 pods
+``make_production_mesh`` derives its shape from ``jax.device_count()``
+(explicit ``shape=`` override for the classic 256/512-chip pod layouts),
+so the same entry points run on a laptop CPU, a forced-host-device CI
+container, or a real pod slice. ``make_serving_mesh`` builds the
+``(data, model)`` mesh the serving engine carves into per-replica
+tensor-parallel submeshes.
 """
 
 from __future__ import annotations
 
+import math
+
 import jax
 
-__all__ = ["make_production_mesh", "make_host_mesh"]
+__all__ = ["make_production_mesh", "make_serving_mesh", "make_host_mesh"]
 
 
-def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+def _largest_divisor_leq_sqrt(n: int) -> int:
+    for d in range(int(math.isqrt(n)), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+def make_production_mesh(*, multi_pod: bool = False, shape: tuple[int, ...] | None = None):
+    """Mesh over the available devices.
+
+    Without ``shape``, derives a balanced layout from
+    ``jax.device_count()``: ``(data, model)`` single-pod with ``model``
+    the largest divisor ≤ √n (256 chips → the classic (16, 16)), or
+    ``(pod=2, data, model)`` with ``multi_pod=True``. With ``shape``,
+    uses exactly that layout over a prefix of ``jax.devices()`` (the
+    historical 256/512-chip entry points pass it explicitly). Raises a
+    clear error when the devices don't factor instead of the old
+    hardcoded-shape crash on non-TPU hosts.
+    """
+    n = jax.device_count()
+    if shape is not None:
+        axes = ("pod", "data", "model") if len(shape) == 3 else ("data", "model")
+        if len(shape) not in (2, 3):
+            raise ValueError(f"shape must be (data, model) or (pod, data, model), got {shape!r}")
+        need = math.prod(shape)
+        if need > n:
+            raise ValueError(
+                f"mesh shape {shape} needs {need} devices but only {n} are "
+                f"visible — set XLA_FLAGS=--xla_force_host_platform_device_count={need} "
+                "(CI / dry-run) or drop shape= to derive one from the device count"
+            )
+        return jax.make_mesh(shape, axes)
+    if multi_pod:
+        if n % 2 != 0:
+            raise ValueError(
+                f"multi_pod mesh needs an even device count, got {n} — "
+                "pass shape=(pod, data, model) explicitly to override"
+            )
+        per_pod = n // 2
+        model = _largest_divisor_leq_sqrt(per_pod)
+        return jax.make_mesh((2, per_pod // model, model), ("pod", "data", "model"))
+    model = _largest_divisor_leq_sqrt(n)
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def make_serving_mesh(*, model_axis: int | None = None, data_axis: int = 1, devices=None):
+    """``(data, model)`` serving mesh over the real local devices.
+
+    ``model_axis`` is the tensor-parallel width of one replica slice
+    (defaults to all remaining devices after ``data_axis``); the engine
+    splits the data axis into per-replica submeshes
+    (:func:`repro.distributed.sharding.replica_submeshes`). Errors
+    clearly when the request doesn't fit the visible devices.
+    """
+    devs = list(devices if devices is not None else jax.devices())
+    n = len(devs)
+    if data_axis < 1:
+        raise ValueError(f"data_axis must be >= 1, got {data_axis}")
+    if model_axis is None:
+        if n % data_axis != 0:
+            raise ValueError(
+                f"{n} devices don't factor into data_axis={data_axis} slices — "
+                "pass model_axis explicitly"
+            )
+        model_axis = n // data_axis
+    need = data_axis * model_axis
+    if need > n:
+        raise ValueError(
+            f"serving mesh (data={data_axis}, model={model_axis}) needs {need} "
+            f"devices but only {n} are visible — set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need} or shrink the axes"
+        )
+    import numpy as np
+    from jax.sharding import Mesh
+
+    grid = np.array(devs[:need]).reshape(data_axis, model_axis)
+    return Mesh(grid, ("data", "model"))
 
 
 def make_host_mesh():

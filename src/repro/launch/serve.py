@@ -17,7 +17,8 @@ import jax
 from ..configs import ARCH_NAMES, get_config, get_smoke_config
 from ..models import build_model, init_from_template
 from ..models.registry import default_draft_for
-from ..serving import PipelineServer
+from ..serving import MPPipelineServer, PipelineServer
+from .mesh import make_serving_mesh
 
 
 def main() -> None:
@@ -73,6 +74,22 @@ def main() -> None:
                          "Requires --paged")
     ap.add_argument("--spec-k", type=int, default=4,
                     help="draft tokens proposed per speculative round")
+    ap.add_argument("--mesh-model", type=int, default=None,
+                    help="tensor-parallel width: shard each stage's params "
+                         "over a 'model' mesh axis (SERVE_RULES), one jitted "
+                         "dispatch lowering to collectives. Needs "
+                         "mesh-model * mesh-data visible devices (XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N on CPU)")
+    ap.add_argument("--mesh-data", type=int, default=1,
+                    help="replica slices of the serving mesh: replicas are "
+                         "assigned round-robin to mesh-data disjoint "
+                         "(1, mesh-model) submeshes — real replica sets")
+    ap.add_argument("--multiprocess", action="store_true",
+                    help="one OS process per (group, replica) stage cell "
+                         "(dense whole-prompt mode): handoffs cross process "
+                         "boundaries, process death is a live membership "
+                         "leave. --mesh-model then gives each worker its own "
+                         "forced-host TP mesh")
     ap.add_argument("--arrival-p", type=float, default=0.5)
     ap.add_argument("--harvest", type=float, nargs=2, default=(6.0, 10.0))
     ap.add_argument("--seed", type=int, default=0)
@@ -97,9 +114,7 @@ def main() -> None:
         )
         spec_draft = (draft, dparams)
 
-    server = PipelineServer(
-        model,
-        params,
+    common = dict(
         n_groups=args.groups,
         n_replicas=args.replicas,
         policy=args.policy,
@@ -107,18 +122,52 @@ def main() -> None:
         max_len=128,
         max_batch=args.max_batch,
         max_queue=args.max_queue,
-        paged=args.paged,
-        page_size=args.page_size,
-        max_pages=args.max_pages,
-        kv_dtype=None if args.kv_dtype == "compute" else args.kv_dtype,
-        prefill_chunk=args.prefill_chunk,
         max_park_steps=args.max_park_steps if args.max_park_steps > 0 else None,
         async_depth=args.async_depth,
-        spec_draft=spec_draft,
-        spec_k=args.spec_k,
         seed=args.seed,
     )
+    if args.multiprocess:
+        if args.paged or args.prefill_chunk or args.spec_draft:
+            ap.error("--multiprocess is dense whole-prompt only "
+                     "(no --paged / --prefill-chunk / --spec-draft)")
+        server = MPPipelineServer(
+            {
+                "arch": args.arch,
+                "smoke": args.smoke,
+                "overrides": {"dtype": "float32", "param_dtype": "float32"},
+                "seed": 0,
+            },
+            mesh_model=args.mesh_model or 1,
+            **common,
+        )
+    else:
+        mesh = None
+        if args.mesh_model is not None:
+            mesh = make_serving_mesh(
+                model_axis=args.mesh_model, data_axis=args.mesh_data
+            )
+        server = PipelineServer(
+            model,
+            params,
+            mesh=mesh,
+            paged=args.paged,
+            page_size=args.page_size,
+            max_pages=args.max_pages,
+            kv_dtype=None if args.kv_dtype == "compute" else args.kv_dtype,
+            prefill_chunk=args.prefill_chunk,
+            spec_draft=spec_draft,
+            spec_k=args.spec_k,
+            **common,
+        )
+    if args.mesh_model is not None or args.multiprocess:
+        print(
+            f"substrate: {'multiprocess' if args.multiprocess else 'mesh'} "
+            f"model_axis={args.mesh_model or 1} data_axis={args.mesh_data} "
+            f"devices={jax.device_count()}"
+        )
     stats = server.run(args.slots, arrival_p=args.arrival_p)
+    if args.multiprocess:
+        server.close()
     paged_info = (
         f" preempted={stats.preempted_jobs} peak_active={stats.peak_active}"
         if args.paged

@@ -90,6 +90,10 @@ class Model:
     verify_step_paged: Callable | None = None  # speculative verify: same
     #   signature as prefill_chunk_paged; lane w holds [last_token, d_1..d_k]
     #   at positions offsets[w].. — one chunk call verifies k+1 positions
+    cache_axes: Callable | None = None  # () -> logical axis names for the
+    #   slot-stacked serving cache, mirroring cache_shapes leaf-for-leaf
+    #   (transformer.slot_cache_logical_axes) — the mesh engine resolves
+    #   them through serve_cache_spec; None = commit caches replicated
 
     @property
     def name(self) -> str:
@@ -169,4 +173,5 @@ def build_model(cfg: ModelConfig) -> Model:
         prefill_chunk_batch=prefill_chunk_batch,
         prefill_chunk_paged=prefill_chunk_paged,
         verify_step_paged=verify_step_paged,
+        cache_axes=lambda: transformer.slot_cache_logical_axes(cfg),
     )

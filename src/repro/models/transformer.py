@@ -58,6 +58,7 @@ __all__ = [
     "supports_paged",
     "init_cache_shapes",
     "cache_logical_axes",
+    "slot_cache_logical_axes",
     "layer_plan",
     "LayerPlan",
 ]
@@ -361,6 +362,31 @@ def cache_logical_axes(cfg: ModelConfig) -> dict:
             entry["ssm"] = ("layers", "cache_batch", "ssm_inner", "ssm_state")
         c[f"c{i}"] = entry
     return c
+
+
+def slot_cache_logical_axes(cfg: ModelConfig) -> dict:
+    """Axis names for the serving engine's slot-stacked decode cache.
+
+    The engine stacks per-request caches (inner batch dim 1) on a new
+    leading *slot* axis; that slot axis is the continuous-batching
+    batch, so it takes the ``cache_batch`` name and the degenerate
+    inner batch dim drops to None. The tree mirrors
+    :func:`init_cache_shapes` leaf-for-leaf — the serving engine zips
+    the two to commit each leaf to its replica submesh under
+    :func:`repro.distributed.sharding.serve_cache_spec` (shards only
+    ``cache_batch``; everything else replicates within the slice).
+    """
+    per_req = cache_logical_axes(cfg)
+    out: dict = {"len": ("cache_batch",)}
+    for key, entry in per_req.items():
+        if key == "len":
+            continue
+        out[key] = {
+            name: ("cache_batch",)
+            + tuple(None if a == "cache_batch" else a for a in axes)
+            for name, axes in entry.items()
+        }
+    return out
 
 
 def prefill(params, batch, cfg: ModelConfig, *, max_len: int):

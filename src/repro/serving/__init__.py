@@ -14,6 +14,7 @@ from .engine import (
     reset_trace_counts,
     trace_counts,
 )
+from .mpserve import MPPipelineServer, StageHost, WorkerDied, WorkerError
 from .partition import partition_model, slice_stage_params, stage_configs
 from .router import RouteError, Router
 from .scheduler import StepScheduler
@@ -30,6 +31,10 @@ __all__ = [
     "PagePool",
     "kv_page_bytes",
     "StepScheduler",
+    "MPPipelineServer",
+    "StageHost",
+    "WorkerDied",
+    "WorkerError",
     "partition_model",
     "slice_stage_params",
     "stage_configs",

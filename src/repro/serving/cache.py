@@ -337,6 +337,11 @@ class PagedKVCache(KVCacheManager):
         ]
         self._snap_idx = 0
         self._bt_dev = None  # device copy, invalidated on row change
+        # Optional jax.sharding.Sharding: under a serving mesh the engine
+        # points this at the owning replica's submesh so each refresh
+        # commits the table next to the pool it addresses (otherwise
+        # every paged dispatch would re-transfer it to the slice).
+        self.sharding = None
 
     # -- capacity --------------------------------------------------------
     def capacity_weight(self) -> int:
@@ -433,12 +438,16 @@ class PagedKVCache(KVCacheManager):
         the working table, so an in-flight dispatch holding the previous
         device array never sees its backing host buffer mutate."""
         if self._bt_dev is None:
+            import jax
             import jax.numpy as jnp
 
             self._snap_idx = (self._snap_idx + 1) % self.table_buffers
             buf = self._snapshots[self._snap_idx]
             np.copyto(buf, self.block_table)
-            self._bt_dev = jnp.asarray(buf)
+            if self.sharding is not None:
+                self._bt_dev = jax.device_put(buf, self.sharding)
+            else:
+                self._bt_dev = jnp.asarray(buf)
         return self._bt_dev
 
     # -- introspection ---------------------------------------------------

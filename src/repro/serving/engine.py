@@ -64,6 +64,28 @@ XLA fallback alike. KV bytes per token drop 4x (fp32 compute) / 2x
 (``benchmarks/quant_kv_bench.py``; accuracy swept in
 ``tests/test_quant_kv.py``).
 
+Mesh-sharded execution (``mesh=...``)
+-------------------------------------
+With a ``(data, model)`` serving mesh (``launch.mesh.make_serving_mesh``)
+each replica owns a tensor-parallel **submesh**: the mesh's data axis is
+carved into per-replica device slices
+(:func:`repro.distributed.sharding.replica_submeshes`, round-robin when
+replicas outnumber slices) and every stage's params are placed once per
+slice under ``SERVE_RULES`` NamedShardings — TP over ``model``,
+replicated over ``data`` — so one jitted dispatch per replica step
+lowers to collectives over the slice's devices, with no per-device
+Python loop. KV caches and paged pools are committed to the owning
+replica's submesh (sharded only on ``cache_batch``, which is the data
+axis — i.e. fully replicated *within* a tensor-parallel slice), so a
+replica's cache never straddles replica boundaries and the Router
+routes over real disjoint device sets. Stage handoffs between replicas
+on different slices are placed onto the consuming replica's submesh at
+assembly time — a device-to-device transfer, dispatched inside the
+async ring's dispatch phase (no host sync: d2h stays commit-only under
+the sanitizer contract). Token streams are bit-for-bit identical to the
+single-device engine (``tests/test_mesh_serving.py``,
+``benchmarks/mesh_bench.py``).
+
 Async engine core (``async_depth=K``)
 -------------------------------------
 The step loop is split into a **producer** (scheduler decisions + call
@@ -132,8 +154,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from jax.sharding import NamedSharding, PartitionSpec
+
 from ..analysis.sanitizer import host_readback, mark_engine_phase, mark_engine_step
 from ..core.power import PowerModePolicy, dynamic_policy
+from ..distributed.sharding import (
+    SERVE_RULES,
+    param_shardings,
+    replica_submeshes,
+    serve_cache_spec,
+)
 from ..models.registry import Model
 from .budget import ReplicaBudget
 from .cache import DenseSlotCache, KVCacheManager, PagedKVCache
@@ -344,11 +374,27 @@ class _SpecState:
         # (a clamped start would silently overwrite live rows).
         shapes = draft.cache_shapes(1, server.max_len + k + 1)
         self.caches = {
-            r: jax.tree_util.tree_map(
-                lambda sh: jnp.zeros((W,) + tuple(sh.shape), sh.dtype), shapes
+            r: server._place(
+                r,
+                jax.tree_util.tree_map(
+                    lambda sh: jnp.zeros((W,) + tuple(sh.shape), sh.dtype), shapes
+                ),
             )
             for r in range(server.R)
         }
+        # The draft runs unpartitioned, so under a mesh its params are
+        # simply replicated onto each stage-0 replica's submesh (one
+        # copy per distinct data slice).
+        self._placed_params = None
+        self._slice_of = server._slice_of
+        if server._repl_shardings is not None:
+            self._placed_params = {}
+            for r in range(server.R):
+                d = self._slice_of[r]
+                if d not in self._placed_params:
+                    self._placed_params[d] = jax.device_put(
+                        draft_params, server._repl_shardings[r]
+                    )
         self.rid = {r: np.full((W,), -1, np.int64) for r in range(server.R)}
         self.lens = {r: np.zeros((W,), np.int64) for r in range(server.R)}
 
@@ -395,6 +441,11 @@ class _SpecState:
 
         self.draft_ingest = draft_ingest
         self.draft_round = draft_round
+
+    def params_for(self, r: int):
+        if self._placed_params is None:
+            return self.params
+        return self._placed_params[self._slice_of[r]]
 
 
 class _DenseExec:
@@ -460,23 +511,26 @@ class _DenseExec:
 
             self.chunk_masked = chunk_masked
 
-    def init_cache(self):
-        """Zeroed slot-stacked cache: [max_batch, <B=1 cache>]."""
+    def init_cache(self, r):
+        """Zeroed slot-stacked cache: [max_batch, <B=1 cache>],
+        committed to replica ``r``'s submesh under a serving mesh
+        (sharded only on the leading slot axis = ``cache_batch``)."""
         s = self.server
         shapes = self.model_g.cache_shapes(1, s.max_len)
-        return jax.tree_util.tree_map(
+        cache = jax.tree_util.tree_map(
             lambda sh: jnp.zeros((s.max_batch,) + tuple(sh.shape), sh.dtype), shapes
         )
+        return s._place_cache(self.g, r, cache)
 
     # -- dispatches ------------------------------------------------------
     def run_prefill_whole(self, r, jobs, outputs, mgr: KVCacheManager, readbacks):
         """jobs: [(out_idx, member, inp [1,S(,D)])], grouped by length."""
         s, g = self.server, self.g
-        _, params_g = s.stages[g]
+        params_g = s._params_for(g, r)
         cache = s._caches[(g, r)]
         key = "tokens" if g == 0 else "hidden"
         for length, grp in sorted(_group_by_len(jobs).items()):
-            stacked = jnp.stack([inp for _, _, inp in grp])
+            stacked = jnp.stack([s._place(r, inp) for _, _, inp in grp])
             slots = jnp.asarray([m.slot_ids[g] for _, m, _ in grp], jnp.int32)
             out, cache = self.prefill_into(params_g, {key: stacked}, cache, slots)
             s.stats.prefill_calls += 1
@@ -487,7 +541,7 @@ class _DenseExec:
         """jobs: [(out_idx, member, seq, pos, valid)] — one fixed-shape
         masked dispatch advances every joining prompt by <= C tokens."""
         s, g = self.server, self.g
-        _, params_g = s.stages[g]
+        params_g = s._params_for(g, r)
         C = s.prefill_chunk
         W = s.max_batch
         cache = s._caches[(g, r)]
@@ -509,7 +563,7 @@ class _DenseExec:
             slots = np.asarray([m.slot_ids[g] for _, m, _, _, _ in jobs], np.int32)
             hs = jnp.stack(
                 [
-                    _pad_tail(seq[:, pos : pos + valid], C)
+                    s._place(r, _pad_tail(seq[:, pos : pos + valid], C))
                     for _, _, seq, pos, valid in jobs
                 ]
             )  # [N, 1, C, D]
@@ -535,7 +589,7 @@ class _DenseExec:
         """jobs: [(out_idx, member)] — one masked dispatch over the full
         static slot width."""
         s, g = self.server, self.g
-        _, params_g = s.stages[g]
+        params_g = s._params_for(g, r)
         cache = s._caches[(g, r)]
         last = g == s.G - 1
         W = s.max_batch
@@ -554,7 +608,7 @@ class _DenseExec:
             # prefix; a caching stage only consumes the newest position.
             hs = jnp.stack(
                 [
-                    m.hidden if m.hidden.shape[1] == 1 else m.hidden[:, -1:]
+                    s._place(r, m.hidden if m.hidden.shape[1] == 1 else m.hidden[:, -1:])
                     for _, m in jobs
                 ]
             )
@@ -674,7 +728,7 @@ class _PagedExec:
 
             self.verify_fn = verify_fn
 
-    def init_cache(self):
+    def init_cache(self, r):
         """Shared page pool: [n_layers, P+1, page, KV, Dh] (page index P
         is the scratch page for masked lanes). ``kv_dtype="int8"`` pools
         store int8 entries plus one fp32 scale per page row (init 1.0 so
@@ -694,18 +748,21 @@ class _PagedExec:
             # XLA rejects donating one buffer at two argument positions.
             pools["k_scale"] = jnp.ones(shape[:3], jnp.float32)
             pools["v_scale"] = jnp.ones(shape[:3], jnp.float32)
-        return pools
+        # The shared pool is addressed by page id, not by slot: no
+        # ``cache_batch`` dim exists, so ``serve_cache_spec`` degenerates
+        # to replication within the slice — which is exactly ``_place``.
+        return s._place(r, pools)
 
     # -- dispatches ------------------------------------------------------
     def run_prefill_whole(self, r, jobs, outputs, mgr: PagedKVCache, readbacks):
         s, g = self.server, self.g
-        _, params_g = s.stages[g]
+        params_g = s._params_for(g, r)
         cache = s._caches[(g, r)]
         if "k_scale" in cache:
             return self._run_prefill_whole_quant(r, jobs, outputs, mgr, readbacks)
         key = "tokens" if g == 0 else "hidden"
         for length, grp in sorted(_group_by_len(jobs).items()):
-            stacked = jnp.stack([inp for _, _, inp in grp])
+            stacked = jnp.stack([s._place(r, inp) for _, _, inp in grp])
             nbs = mgr.pool.blocks_for(length)
             page_ids = np.asarray(
                 [mgr.pages[m.rid][:nbs] for _, m, _ in grp], np.int32
@@ -727,7 +784,7 @@ class _PagedExec:
         gather contribute exp(-inf) = 0, so the compact call is
         bit-identical to what the chunked path later reads."""
         s, g = self.server, self.g
-        _, params_g = s.stages[g]
+        params_g = s._params_for(g, r)
         cache = s._caches[(g, r)]
         last = g == s.G - 1
         for length, grp in sorted(_group_by_len(jobs).items()):
@@ -741,7 +798,7 @@ class _PagedExec:
             if g == 0:
                 inp_w = jnp.stack([jnp.asarray(inp[0]) for _, _, inp in grp])
             else:
-                inp_w = jnp.stack([inp[0] for _, _, inp in grp])  # [N, S, D]
+                inp_w = jnp.stack([s._place(r, inp[0]) for _, _, inp in grp])  # [N, S, D]
             out, cache = self.prefill_whole_quant(
                 params_g, inp_w, cache, offs, valids, jnp.asarray(page_ids)
             )
@@ -763,7 +820,7 @@ class _PagedExec:
 
     def run_chunks(self, r, jobs, outputs, mgr: PagedKVCache, readbacks):
         s, g = self.server, self.g
-        _, params_g = s.stages[g]
+        params_g = s._params_for(g, r)
         C = s.prefill_chunk
         W = s.max_batch
         cache = s._caches[(g, r)]
@@ -783,7 +840,7 @@ class _PagedExec:
             slots = np.asarray([m.slot_ids[g] for _, m, _, _, _ in jobs], np.int32)
             hs = jnp.stack(
                 [
-                    _pad_tail(seq[:, pos : pos + valid], C)[0]
+                    s._place(r, _pad_tail(seq[:, pos : pos + valid], C)[0])
                     for _, _, seq, pos, valid in jobs
                 ]
             )  # [N, C, D]
@@ -811,7 +868,7 @@ class _PagedExec:
         position; their outputs are never read. The device block table
         is cached by the manager and refreshed only on page alloc/free."""
         s, g = self.server, self.g
-        _, params_g = s.stages[g]
+        params_g = s._params_for(g, r)
         cache = s._caches[(g, r)]
         last = g == s.G - 1
         W = s.max_batch
@@ -830,7 +887,7 @@ class _PagedExec:
             # after an upstream re-prefill (consume the last position).
             hs = jnp.stack(
                 [
-                    m.hidden if m.hidden.ndim == 2 else m.hidden[:, -1]
+                    s._place(r, m.hidden if m.hidden.ndim == 2 else m.hidden[:, -1])
                     for _, m in jobs
                 ]
             )  # [N, 1, D]
@@ -873,7 +930,7 @@ class _PagedExec:
         advances optimistically by ``valid`` — the accept finalizer (or
         an abort's ``rewind_spec``) rolls the rejected tail back."""
         s, g = self.server, self.g
-        _, params_g = s.stages[g]
+        params_g = s._params_for(g, r)
         C = s._spec.k + 1
         W = s.max_batch
         cache = s._caches[(g, r)]
@@ -889,7 +946,7 @@ class _PagedExec:
         else:
             slots = np.asarray([m.slot_ids[g] for _, m, _, _, _ in jobs], np.int32)
             hs = jnp.stack(
-                [_pad_tail(seq, C)[0] for _, _, seq, _, _ in jobs]
+                [s._place(r, _pad_tail(seq, C)[0]) for _, _, seq, _, _ in jobs]
             )  # [N, C, D]
             inp = (
                 jnp.zeros((W, C, s.cfg.d_model), hs.dtype)
@@ -952,11 +1009,36 @@ class PipelineServer:
         async_depth: int = 2,
         spec_draft: tuple[Model, Any] | None = None,
         spec_k: int = 4,
+        mesh=None,
+        elastic=None,
         seed: int = 0,
     ):
         self.cfg = model.cfg
         self.stages = partition_model(model.cfg, params, n_groups)
         self.G, self.R = n_groups, n_replicas
+        # Mesh-sharded execution: params TP over the model axis per
+        # replica slice, caches committed to the owning slice. All state
+        # is None without a mesh — every placement helper degrades to
+        # identity and the engine is byte-for-byte the single-device one.
+        self.mesh = mesh
+        self.elastic = elastic
+        self._slice_of: list[int] | None = None
+        self._replica_meshes = None
+        self._repl_shardings: list[NamedSharding] | None = None
+        self._placed_params: dict[tuple[int, int], Any] | None = None
+        if mesh is not None:
+            slices, self._slice_of = replica_submeshes(mesh, n_replicas)
+            self._replica_meshes = [slices[d] for d in self._slice_of]
+            self._repl_shardings = [
+                NamedSharding(m, PartitionSpec()) for m in self._replica_meshes
+            ]
+            self._placed_params = {}
+            for g, (model_g, params_g) in enumerate(self.stages):
+                for d, sub in enumerate(slices):
+                    self._placed_params[(g, d)] = jax.device_put(
+                        params_g,
+                        param_shardings(model_g.template, sub, SERVE_RULES),
+                    )
         self.max_len = max_len
         self.max_batch = max_batch
         self.paged = paged
@@ -1081,15 +1163,18 @@ class PipelineServer:
             max_queue=max_queue,
             max_park_steps=max_park_steps,
         )
+        if self._repl_shardings is not None and paged:
+            # Block-table snapshots must live where the pool lives, or
+            # every paged dispatch re-transfers the table to the slice.
+            for (g, r), mgr in self.managers.items():
+                mgr.sharding = self._repl_shardings[r]
         if spec_draft is not None:
             # Built before _exec: the paged backend compiles its verify
             # entry point only when speculation is on.
             self._spec = _SpecState(self, spec_draft[0], spec_draft[1], spec_k)
-        self._exec = [
-            (_PagedExec if paged else _DenseExec)(self, g) for g in range(n_groups)
-        ]
+        self._exec = self._build_exec()
         self._caches = {
-            (g, r): self._exec[g].init_cache()
+            (g, r): self._exec[g].init_cache(r)
             for g in range(n_groups)
             for r in range(n_replicas)
         }
@@ -1105,6 +1190,68 @@ class PipelineServer:
             [len(self._calls[(g, r)]) for r in range(self.R)]
             for g in range(self.G)
         ]
+
+    # ------------------------------------------------------------------
+    # Execution substrate (overridable: mpserve proxies these to worker
+    # processes)
+    # ------------------------------------------------------------------
+    def _build_exec(self):
+        return [
+            (_PagedExec if self.paged else _DenseExec)(self, g)
+            for g in range(self.G)
+        ]
+
+    def _params_for(self, g: int, r: int):
+        """Stage ``g``'s params as replica ``r``'s dispatch should see
+        them: the raw tree without a mesh, the slice-placed TP copy with
+        one."""
+        if self._placed_params is None:
+            return self.stages[g][1]
+        return self._placed_params[(g, self._slice_of[r])]
+
+    def _place(self, r: int, x):
+        """Commit an array (or tree) to replica ``r``'s submesh, replicated.
+
+        Identity without a mesh. A handoff produced on another replica's
+        slice becomes a real device-to-device transfer here — issued in
+        the dispatch phase with no host sync; placing an array already
+        on the slice is a no-op.
+        """
+        if self._repl_shardings is None:
+            return x
+        return jax.device_put(x, self._repl_shardings[r])
+
+    def _place_cache(self, g: int, r: int, cache):
+        """Commit stage ``g``'s slot-stacked cache to replica ``r``'s
+        submesh under :func:`serve_cache_spec`: each leaf shards only on
+        its ``cache_batch`` (slot) dim — the data axis, size 1 inside a
+        tensor-parallel slice — and replicates everywhere else, so a
+        replica's cache never straddles a slice boundary. Identity
+        without a mesh; models that declare no cache axes fall back to
+        plain replication."""
+        if self._repl_shardings is None:
+            return cache
+        model_g = self.stages[g][0]
+        if model_g.cache_axes is None:
+            return jax.device_put(cache, self._repl_shardings[r])
+        mesh = self._replica_meshes[r]
+        leaves, treedef = jax.tree_util.tree_flatten(cache)
+        names = treedef.flatten_up_to(model_g.cache_axes())
+        return jax.tree_util.tree_unflatten(
+            treedef,
+            [
+                jax.device_put(
+                    leaf,
+                    NamedSharding(mesh, serve_cache_spec(leaf.shape, n, mesh)),
+                )
+                for leaf, n in zip(leaves, names)
+            ],
+        )
+
+    def _on_ring_abort(self, g: int, r: int) -> None:
+        """Hook: a dead replica's in-flight ring was just discarded.
+        The multi-process engine drains the worker's now-orphaned RPC
+        responses here; in-process execution has nothing to clean up."""
 
     # ------------------------------------------------------------------
     # Admission
@@ -1196,7 +1343,7 @@ class PipelineServer:
                         buf[slot, 0, :] = ctx[dl : dl + C]
                         e[3] = dl + C
                 cache = spec.draft_ingest(
-                    spec.params, jnp.asarray(buf), cache,
+                    spec.params_for(r), jnp.asarray(buf), cache,
                     jnp.asarray(offs), jnp.asarray(valids), jnp.asarray(mask),
                 )
                 self.stats.draft_calls += 1
@@ -1219,7 +1366,7 @@ class PipelineServer:
                     valids[slot] = 0
                 spec.lens[r][slot] = L + 1  # the scan writes ctx[L]'s row
             drafts, cache = spec.draft_round(
-                spec.params, jnp.asarray(buf), cache,
+                spec.params_for(r), jnp.asarray(buf), cache,
                 jnp.asarray(offs), jnp.asarray(valids),
                 jnp.asarray(tok0), jnp.asarray(mask),
             )
@@ -1289,7 +1436,10 @@ class PipelineServer:
                     need[m.rid] = pos + valid
                 else:
                     seq = self._stage_input(m, g)
-                    inp = jnp.asarray(seq)[None, :] if g == 0 else seq
+                    # Host-side [1, S] here; the exec backend's jnp.stack
+                    # moves it to the device (or the remote backend ships
+                    # it as-is — no device array ever enters MP dispatch).
+                    inp = np.asarray(seq)[None, :] if g == 0 else seq
                     plan[m.rid] = ("whole", inp)
                     need[m.rid] = _seq_len(seq)
         served: list[Request] = []
@@ -1505,11 +1655,7 @@ class PipelineServer:
         #    a dead dispatch's results are dropped, not committed.
         for (g, r), ring in self._calls.items():
             if ring and not self.budgets[g][r].alive:
-                for call in ring:
-                    for m in call.members:
-                        m.in_call = False
-                        sched.reroute_or_drop(m)
-                ring.clear()
+                self._abort_ring(g, r)
 
         # 3) re-place parked / dead-replica requests, BEFORE queue
         #    admission (in-flight work must not be starved by fresh
@@ -1566,12 +1712,28 @@ class PipelineServer:
         #    repro.analysis TransferSanitizer is active)
         mark_engine_step()
 
+    def _abort_ring(self, g: int, r: int) -> None:
+        """Discard (g, r)'s in-flight ring: members reroute loss-free
+        (re-prefill on a sibling), readbacks are never finalized, and
+        the :meth:`_on_ring_abort` hook cleans up backend state."""
+        ring = self._calls[(g, r)]
+        for call in ring:
+            for m in call.members:
+                m.in_call = False
+                self.scheduler.reroute_or_drop(m)
+        ring.clear()
+        self._on_ring_abort(g, r)
+
     # ------------------------------------------------------------------
     def fail_replica(self, g: int, r: int) -> None:
         self.budgets[g][r].fail()
+        if self.elastic is not None:
+            self.elastic.fail(g, r)
 
     def recover_replica(self, g: int, r: int) -> None:
         self.budgets[g][r].recover()
+        if self.elastic is not None:
+            self.elastic.rejoin(g, r)
 
     @property
     def queue_depth(self) -> int:
